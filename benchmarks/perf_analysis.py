@@ -1,0 +1,64 @@
+"""Hillclimb analysis helpers: attention-score traffic attribution.
+
+The XLA (non-Pallas) attention path materialises (q_block x kv_len) score /
+softmax / mask tensors in HBM; the Pallas flash-attention kernel keeps them
+VMEM-resident. Since Pallas cannot lower for TPU on this CPU container, the
+dry-run measures the XLA path — this module attributes score-shaped traffic
+in a saved HLO so EXPERIMENTS.md §Perf can report the TPU-projected
+(flash-corrected) memory term alongside the measured one.
+
+Heuristic: a tensor is score-shaped when its trailing two dims are
+(q_block, kv_len) or (kv_len, q_block) for the cell's (q_block, seq).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from pathlib import Path
+from typing import Dict, Tuple
+
+from repro.launch import hloparse
+from repro.launch.mesh import HBM_BW
+
+
+def score_traffic(hlo_text: str, seq_len: int, q_block: int = 512
+                  ) -> Dict[str, float]:
+    comps, entry = hloparse.parse_computations(hlo_text)
+    total = 0.0
+    scores = 0.0
+
+    def is_score_shape(type_str: str) -> bool:
+        sd = hloparse._shape_dims(type_str)
+        if sd is None or len(sd[1]) < 2:
+            return False
+        a, b = sd[1][-2], sd[1][-1]
+        return {a, b} <= {q_block, seq_len} and max(a, b) == seq_len
+
+    def walk(name: str, mult: float, depth: int = 0):
+        nonlocal total, scores
+        comp = comps.get(name)
+        if comp is None or depth > 12:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                bm = hloparse._BODY_RE.search(ins.line)
+                tm = hloparse._TRIP_RE.search(ins.line)
+                if bm:
+                    walk(bm.group(1), mult * (int(tm.group(1)) if tm else 1),
+                         depth + 1)
+                continue
+            if ins.op in hloparse._TRAFFIC_OPS:
+                b = mult * 2 * hloparse._type_bytes(ins.type_str)
+                total += b
+                if is_score_shape(ins.type_str):
+                    scores += b
+
+    walk(entry, 1.0)
+    return {"traffic_bytes": total, "score_bytes": scores,
+            "corrected_bytes": total - scores,
+            "memory_s": total / HBM_BW,
+            "memory_s_flash": (total - scores) / HBM_BW,
+            "score_frac": scores / max(total, 1)}
+
+
+def analyze_cell_hlo(path: str, seq_len: int, q_block: int = 512) -> Dict[str, float]:
+    return score_traffic(Path(path).read_text(), seq_len, q_block)

@@ -1,0 +1,66 @@
+"""§Perf summary — hillclimbed variants vs paper-faithful baselines.
+
+Reads results/hillclimb/<variant>/ alongside results/dryrun/ and prints the
+before/after roofline terms for the three hillclimb cells (+ the jamba
+transfer bonus). Skips gracefully when variants haven't been generated.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+CELLS = [
+    # (arch, shape, variant dir, label)
+    ("llama3-8b", "train_4k", "fsdp", "fsdp preset"),
+    ("deepseek-v3-671b", "train_4k", "moe_sm", "shard_map MoE"),
+    ("olmoe-1b-7b", "train_4k", "moe_sm_fsdp", "shard_map MoE + fsdp"),
+    ("jamba-v0.1-52b", "train_4k", "moe_sm", "shard_map MoE (transfer)"),
+]
+
+
+def _load(p: Path):
+    try:
+        rec = json.loads(p.read_text())
+        return rec if rec.get("status") == "ok" else None
+    except Exception:
+        return None
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    rows = []
+    for arch, shape, variant, label in CELLS:
+        base = _load(Path(f"results/dryrun/pod256/{arch}__{shape}.json"))
+        opt = _load(Path(f"results/hillclimb/{variant}/pod256/{arch}__{shape}.json"))
+        if base is None or opt is None:
+            continue
+        b, o = base["roofline"], opt["roofline"]
+        bfrac = b["compute_s"] / max(b["compute_s"], b["memory_s"], b["collective_s"])
+        ofrac = o["compute_s"] / max(o["compute_s"], o["memory_s"], o["collective_s"])
+        rows.append((arch, label, b, o, bfrac, ofrac))
+        if verbose:
+            print(f"  {arch:18s} [{label}]")
+            print(f"    baseline : C={b['compute_s']:8.2f}s M={b['memory_s']:8.2f}s "
+                  f"X={b['collective_s']:8.2f}s  frac={bfrac:.3f}")
+            print(f"    optimized: C={o['compute_s']:8.2f}s M={o['memory_s']:8.2f}s "
+                  f"X={o['collective_s']:8.2f}s  frac={ofrac:.3f} "
+                  f"(X {b['collective_s']/max(o['collective_s'],1e-9):.1f}x, "
+                  f"M {b['memory_s']/max(o['memory_s'],1e-9):.1f}x)")
+    wall = time.perf_counter() - t0
+    if not rows:
+        return {"name": "perf_summary", "us_per_call": wall * 1e6,
+                "derived": "no hillclimb variants (see EXPERIMENTS.md §Perf)",
+                "checks": {}}
+    gains = [r[4] and r[5] / max(r[4], 1e-9) for r in rows]
+    return {
+        "name": "perf_summary",
+        "us_per_call": wall * 1e6,
+        "derived": " ".join(f"{r[0].split('-')[0]}:{r[4]:.3f}->{r[5]:.3f}"
+                            for r in rows),
+        "checks": {"all_cells_improved": all(r[5] > r[4] for r in rows)},
+    }
+
+
+if __name__ == "__main__":
+    print(run())

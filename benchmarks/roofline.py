@@ -1,0 +1,128 @@
+"""Roofline table assembly from the dry-run JSONs (results/dryrun/).
+
+Per (arch x shape x mesh): the three roofline terms (compute / memory /
+collective seconds per step, per chip), the dominant term, MODEL_FLOPS =
+6*N_active*D (train) or 2*N_active*D (serve), and the useful-flops ratio.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+RESULTS = Path("results/dryrun")
+
+
+def load_cells(mesh: str = "pod256", root: Path = RESULTS) -> List[dict]:
+    out = []
+    for p in sorted((root / mesh).glob("*.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            continue
+    return out
+
+
+def dominant(rec: dict) -> str:
+    r = rec["roofline"]
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    return max(terms, key=terms.get)
+
+
+def roofline_fraction(rec: dict) -> float:
+    """ideal_term / max(all terms) — 1.0 = running at the workload's roofline.
+
+    Training/prefill are compute workloads (ideal = compute term); decode is
+    inherently bandwidth-bound (every weight is read per token), so its ideal
+    term is the memory term.
+    """
+    r = rec["roofline"]
+    worst = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    if worst <= 0:
+        return 0.0
+    ideal = r["memory_s"] if rec.get("kind") == "decode" else r["compute_s"]
+    return ideal / worst
+
+
+def table(mesh: str = "pod256", root: Path = RESULTS) -> List[dict]:
+    rows = []
+    for rec in load_cells(mesh, root):
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec.get("status", "?")})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": dominant(rec),
+            "roofline_frac": roofline_fraction(rec),
+            "model_flops_per_chip": rec.get("model_flops_per_chip", 0),
+            "useful_ratio": rec.get("useful_flops_ratio", 0),
+            "hlo_flops": rec["hlo_stats"]["flops"],
+            "state_gib": rec.get("analytic_state_bytes_per_device", 0) / 2**30,
+            "compile_s": rec.get("t_compile_s", 0),
+        })
+    return rows
+
+
+def markdown(mesh: str = "pod256", root: Path = RESULTS) -> str:
+    rows = table(mesh, root)
+    lines = [
+        f"| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        f"dominant | roofline frac | useful FLOPs ratio | state GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"{r['status']} | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"{r['dominant']} | {r['roofline_frac']:.3f} | "
+            f"{r['useful_ratio']:.2f} | {r['state_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True):
+    t0 = time.perf_counter()
+    rows = table("pod256")
+    ok = [r for r in rows if r["status"] == "ok"]
+    n512 = len([r for r in table("pod512") if r["status"] == "ok"])
+    wall = time.perf_counter() - t0
+    if not ok:
+        return {"name": "roofline", "us_per_call": wall * 1e6,
+                "derived": "no dryrun results (run python -m repro.launch.dryrun)",
+                "checks": {"cells_present": False}}
+    worst = min(ok, key=lambda r: r["roofline_frac"])
+    best = max(ok, key=lambda r: r["roofline_frac"])
+    coll = max(ok, key=lambda r: r["collective_s"])
+    if verbose:
+        for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+            print(f"  {r['arch']:18s} {r['shape']:12s} "
+                  f"C={r['compute_s']*1e3:9.2f}ms M={r['memory_s']*1e3:9.2f}ms "
+                  f"X={r['collective_s']*1e3:9.2f}ms dom={r['dominant']:10s} "
+                  f"frac={r['roofline_frac']:.3f}")
+        print(f"  worst cell: {worst['arch']}/{worst['shape']} "
+              f"frac={worst['roofline_frac']:.3f}; most collective-bound: "
+              f"{coll['arch']}/{coll['shape']}")
+    return {
+        "name": "roofline",
+        "us_per_call": wall * 1e6,
+        "derived": (f"cells_pod256={len(ok)} cells_pod512={n512} "
+                    f"worst={worst['arch']}/{worst['shape']}:"
+                    f"{worst['roofline_frac']:.3f} "
+                    f"best={best['arch']}/{best['shape']}:"
+                    f"{best['roofline_frac']:.3f}"),
+        "checks": {"all_cells_ok": all(r["status"] == "ok" for r in rows),
+                   "both_meshes": n512 == len(ok)},
+    }
+
+
+if __name__ == "__main__":
+    print(run())

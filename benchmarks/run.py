@@ -1,0 +1,53 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints a human-readable section per benchmark followed by a
+``name,us_per_call,derived`` CSV summary, and exits non-zero if any
+reproduction check fails.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig6_e2e, fig7_tee, fig8_tce, fig9_nebula,
+                            kernel_bench, perf_summary, roofline,
+                            table1_faults, theory_model)
+
+    benches = [
+        ("Table I  — fault-category mix", table1_faults),
+        ("Fig. 6   — end-to-end training (baseline vs TRANSOM)", fig6_e2e),
+        ("Fig. 7   — TEE anomaly coverage", fig7_tee),
+        ("Fig. 8   — TCE checkpoint save/load vs sync NAS", fig8_tce),
+        ("Fig. 9   — TCE vs Nebula-style async", fig9_nebula),
+        ("Eqs. 1-3 — analytic checkpoint model", theory_model),
+        ("Roofline — dry-run derived terms", roofline),
+        ("Perf     — hillclimb baseline vs optimized", perf_summary),
+        ("Kernels  — Pallas vs oracle", kernel_bench),
+    ]
+
+    rows = []
+    all_ok = True
+    for title, mod in benches:
+        print(f"\n=== {title} ===")
+        rec = mod.run(verbose=True)
+        checks = rec.get("checks", {})
+        failed = [k for k, v in checks.items() if not v]
+        if failed:
+            all_ok = False
+            print(f"  !! FAILED CHECKS: {failed}")
+        else:
+            print(f"  checks: {', '.join(checks)} all OK")
+        rows.append(rec)
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if not all_ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

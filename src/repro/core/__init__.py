@@ -1,0 +1,2 @@
+"""TRANSOM core: TOL (launcher/operator FSM), TEE (anomaly detection),
+TCE (asynchronous fault-tolerant checkpoint engine)."""

@@ -1,0 +1,14 @@
+from .engine import TCEngine, TCEConfig, SaveHandle
+from .cache import CacheServer, EvictionConfig
+from .store import DiskStore, NASStore
+from .model import tce_theory, TheoryParams
+from .sharding import ShardSpec, shard_state, unshard_state, reshard
+
+__all__ = [
+    "TCEngine", "TCEConfig", "SaveHandle", "CacheServer", "EvictionConfig",
+    "DiskStore", "NASStore", "tce_theory", "TheoryParams",
+    "ShardSpec", "shard_state", "unshard_state", "reshard",
+]
+from .patch import transom_protect, start_step, restore_into  # noqa: E402,F401
+
+__all__ += ["transom_protect", "start_step", "restore_into"]

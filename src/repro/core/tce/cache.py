@@ -1,0 +1,139 @@
+"""Per-node checkpoint cache server.
+
+One ``CacheServer`` per (simulated) node. Holds checkpoint shards for recent
+steps in the arena, enforces the paper's two eviction strategies (memory cap ->
+evict oldest; max cached cycles), and tracks which steps have been persisted /
+backed up (the reconciler drives those flags to the desired state).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+from .arena import Arena, ArenaError
+from .fastcopy import chunked_copy
+from .sharding import NodeShards, ShardSpec
+
+
+@dataclass(frozen=True)
+class EvictionConfig:
+    mem_limit_bytes: int = 1 << 30
+    max_cycles: int = 2              # max checkpoint steps kept in cache
+
+
+@dataclass
+class CacheEntry:
+    step: int
+    shards: Dict[str, tuple]                      # path -> (spec, slab_id, nbytes, dtype, shape)
+    persisted: bool = False
+    backed_up: bool = False
+    is_backup: bool = False                       # True when held for a neighbour
+    owner_rank: int = -1
+
+
+class CacheServer:
+    def __init__(self, rank: int, evict: EvictionConfig = EvictionConfig()):
+        self.rank = rank
+        self.evict_cfg = evict
+        self.arena = Arena(evict.mem_limit_bytes)
+        self._entries: Dict[tuple, CacheEntry] = {}   # (step, owner) -> entry
+        self._lock = threading.RLock()
+        self.evictions = 0
+
+    # ------------------------------------------------------------------ #
+    def put(self, step: int, shards: NodeShards, *, is_backup: bool = False,
+            owner_rank: Optional[int] = None, n_threads: int = 2) -> None:
+        owner = self.rank if owner_rank is None else owner_rank
+        stored: Dict[str, tuple] = {}
+        with self._lock:
+            for path, (spec, data) in shards.items():
+                data = np.ascontiguousarray(data)
+                flat = data.view(np.uint8).reshape(-1)
+                sid = self._alloc_with_eviction(flat.nbytes)
+                chunked_copy(self.arena.view(sid, flat.nbytes), flat,
+                             n_threads=n_threads)
+                stored[path] = (spec, sid, flat.nbytes, str(data.dtype), data.shape)
+            key = (step, owner)
+            if key in self._entries:
+                self._drop(key)
+            self._entries[key] = CacheEntry(step, stored, is_backup=is_backup,
+                                            owner_rank=owner)
+            self._enforce_cycles()
+
+    def get(self, step: int, owner_rank: Optional[int] = None
+            ) -> Optional[NodeShards]:
+        owner = self.rank if owner_rank is None else owner_rank
+        with self._lock:
+            ent = self._entries.get((step, owner))
+            if ent is None:
+                return None
+            out: NodeShards = {}
+            for path, (spec, sid, nbytes, dtype, shape) in ent.shards.items():
+                buf = self.arena.view(sid, nbytes)
+                out[path] = (spec, np.array(buf.view(np.dtype(dtype))).reshape(shape))
+            return out
+
+    # ------------------------------------------------------------------ #
+    def steps(self, include_backups: bool = False) -> List[int]:
+        with self._lock:
+            return sorted({s for (s, o), e in self._entries.items()
+                           if include_backups or not e.is_backup})
+
+    def entry(self, step: int, owner_rank: Optional[int] = None
+              ) -> Optional[CacheEntry]:
+        owner = self.rank if owner_rank is None else owner_rank
+        return self._entries.get((step, owner))
+
+    def mark(self, step: int, *, persisted: Optional[bool] = None,
+             backed_up: Optional[bool] = None,
+             owner_rank: Optional[int] = None) -> None:
+        ent = self.entry(step, owner_rank)
+        if ent is None:
+            return
+        if persisted is not None:
+            ent.persisted = persisted
+        if backed_up is not None:
+            ent.backed_up = backed_up
+
+    def wipe(self) -> None:
+        """Simulated node crash: all cached checkpoints are lost."""
+        with self._lock:
+            self._entries.clear()
+            self.arena.clear()
+
+    # -- eviction -------------------------------------------------------- #
+    def _alloc_with_eviction(self, nbytes: int) -> int:
+        while True:
+            try:
+                return self.arena.alloc(nbytes)
+            except ArenaError:
+                if not self._evict_oldest():
+                    raise
+
+    def _evict_oldest(self) -> bool:
+        # oldest (lowest step) first; prefer non-backup owner entries? The
+        # paper evicts oldest caches under memory pressure — we follow that,
+        # backups included (they are re-creatable from their owner).
+        if not self._entries:
+            return False
+        key = min(self._entries, key=lambda k: k[0])
+        self._drop(key)
+        self.evictions += 1
+        return True
+
+    def _enforce_cycles(self) -> None:
+        own_steps = sorted({s for (s, o) in self._entries if o == self.rank})
+        while len(own_steps) > self.evict_cfg.max_cycles:
+            s = own_steps.pop(0)
+            self._drop((s, self.rank))
+            self.evictions += 1
+
+    def _drop(self, key: tuple) -> None:
+        ent = self._entries.pop(key, None)
+        if ent is None:
+            return
+        for path, (spec, sid, *_rest) in ent.shards.items():
+            self.arena.free_slab(sid)

@@ -1,0 +1,282 @@
+"""TCE — Transom Checkpoint Engine.
+
+Save path (paper §IV-C):
+  1. snapshot train-state leaves to host memory (chunked multi-threaded copy,
+     Alg. 2 analogue) into per-node cache servers      -> training resumes
+  2. asynchronously: reconciler persists every rank's shards to the store and
+     ring-backs-up each cache to node (rank+1) % n     -> zero training stall
+
+Load path (waterfall, with request dedup):
+  local cache -> ring neighbour's backup (one fabric fetch per node, however
+  many local consumers ask) -> persistent store. A checkpoint written on N
+  nodes restores onto M != N nodes via resharding (elastic, beyond-paper).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cache import CacheServer, EvictionConfig
+from .reconciler import Reconciler
+from .sharding import NodeShards, shard_state, unshard_state
+from .store import DiskStore, SimClock
+from .transport import Fabric, MEM_BW, TransportError
+
+
+# --------------------------------------------------------------------------- #
+# Pytree <-> flat dict
+# --------------------------------------------------------------------------- #
+def flatten_pytree(tree) -> Dict[str, np.ndarray]:
+    """Flatten an arbitrary pytree (incl. jax arrays) to {path: np.ndarray}."""
+    import jax
+
+    out: Dict[str, np.ndarray] = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp) or "leaf"
+        out[path] = np.asarray(leaf)
+    return out
+
+
+def _key_str(k) -> str:
+    import jax
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    return str(k)
+
+
+def unflatten_like(tree, flat: Dict[str, np.ndarray]):
+    """Inverse of flatten_pytree given a template tree (shapes must match)."""
+    import jax
+
+    paths = [("/".join(_key_str(k) for k in kp) or "leaf")
+             for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    new_leaves = []
+    for path, leaf in zip(paths, leaves):
+        arr = flat[path]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype).reshape(leaf.shape)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class TCEConfig:
+    n_nodes: int = 4
+    mem_limit_bytes: int = 1 << 30
+    max_cycles: int = 2
+    backup: bool = True
+    async_persist: bool = True
+    # pipelined durability: save(N) first waits (bounded) until save(N-1) is
+    # persisted+backed-up. Zero stall in steady state (intervals >> persist
+    # time), backpressure when the reconciler lags, and a deterministic
+    # bounded-staleness guarantee: on any single-node crash the recovery
+    # point is >= N-1, i.e. lost work <= 2 checkpoint intervals.
+    pipeline_durability: bool = True
+    durability_timeout_s: float = 60.0
+    copy_threads: int = 2
+    mem_bw: float = MEM_BW            # modelled B_mem for cache writes
+
+
+class SaveHandle:
+    """Tracks one checkpoint save; wait() blocks until durable."""
+
+    def __init__(self, step: int, engine: "TCEngine"):
+        self.step = step
+        self._engine = engine
+        self.cache_wall_s: float = 0.0       # real time to reach cache (blocking)
+        self.modeled_cache_s: float = 0.0    # bytes / B_mem (paper's metric)
+        self.nbytes: int = 0
+
+    def wait(self, timeout: float = 60.0) -> bool:
+        """Block until the step is persisted + backed up (reconciled)."""
+        return self._engine.reconciler.quiesce(timeout)
+
+
+class TCEngine:
+    def __init__(self, cfg: TCEConfig, store: DiskStore,
+                 fabric: Optional[Fabric] = None,
+                 clock: Optional[SimClock] = None):
+        self.cfg = cfg
+        self.store = store
+        self.clock = clock or SimClock()
+        self.fabric = fabric if fabric is not None else Fabric(clock=self.clock)
+        evict = EvictionConfig(cfg.mem_limit_bytes, cfg.max_cycles)
+        self.caches = [CacheServer(r, evict) for r in range(cfg.n_nodes)]
+        self.reconciler = Reconciler(self.caches, store, self.fabric,
+                                     backup=cfg.backup)
+        if cfg.async_persist:
+            self.reconciler.start()
+        self.stats = {"saves": 0, "restores": 0, "fetch_requests": 0,
+                      "fetch_transfers": 0, "restore_sources": {}}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        self.reconciler.stop()
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, state, *, meta: Optional[dict] = None,
+             wait: bool = False) -> SaveHandle:
+        """Checkpoint `state` (pytree or flat dict). Blocks only for the
+        in-memory cache write; persistence + backup happen asynchronously."""
+        flat = state if isinstance(state, dict) and all(
+            isinstance(v, np.ndarray) for v in state.values()) \
+            else flatten_pytree(state)
+        handle = SaveHandle(step, self)
+        if self.cfg.async_persist and self.cfg.pipeline_durability:
+            # bounded-staleness pipeline: previous checkpoints become durable
+            # before this one enters the cache (no-op in steady state)
+            self.reconciler.quiesce(self.cfg.durability_timeout_s)
+        t0 = time.perf_counter()
+        per_node = shard_state(flat, self.cfg.n_nodes)
+        nbytes = 0
+        max_node_bytes = 0
+        for rank, shards in enumerate(per_node):
+            node_bytes = sum(d.nbytes for _, d in shards.values())
+            nbytes += node_bytes
+            max_node_bytes = max(max_node_bytes, node_bytes)
+            self.caches[rank].put(step, shards, n_threads=self.cfg.copy_threads)
+        handle.cache_wall_s = time.perf_counter() - t0
+        # nodes write their caches in parallel -> modelled latency is the max
+        handle.modeled_cache_s = max_node_bytes / self.cfg.mem_bw
+        handle.nbytes = nbytes
+        self.clock.advance(handle.modeled_cache_s)
+        with self._lock:
+            self.stats["saves"] += 1
+        if not self.cfg.async_persist:
+            self.reconciler.reconcile_once()
+        else:
+            self.reconciler.kick()
+        if wait:
+            handle.wait()
+        return handle
+
+    # ------------------------------------------------------------------ #
+    def _fetch_backup(self, step: int, owner: int,
+                      memo: Dict[Tuple[int, int], Optional[NodeShards]]
+                      ) -> Optional[NodeShards]:
+        """Fetch `owner`'s shards from its ring neighbour's cache (dedup'd)."""
+        key = (step, owner)
+        with self._lock:
+            self.stats["fetch_requests"] += 1
+        if key in memo:
+            return memo[key]
+        holder = (owner + 1) % self.cfg.n_nodes
+        shards = None
+        if not self.fabric.is_down(holder):
+            backup = self.caches[holder].get(step, owner_rank=owner)
+            if backup is not None:
+                payload = {p: d for p, (sp, d) in backup.items()}
+                try:
+                    # the consumer is the replacement node for `owner`
+                    self.fabric.send(holder, owner, payload, check_dst=False)
+                    with self._lock:
+                        self.stats["fetch_transfers"] += 1
+                    shards = backup
+                except TransportError:
+                    shards = None
+        memo[key] = shards
+        return shards
+
+    def restore(self, step: Optional[int] = None,
+                n_nodes: Optional[int] = None,
+                consumers_per_node: int = 1
+                ) -> Tuple[int, Dict[str, np.ndarray]]:
+        """Waterfall restore. Returns (step, flat state dict).
+
+        With step=None, candidate steps are tried newest-first: a checkpoint
+        whose async backup/persist had not completed when the failure hit is
+        skipped in favour of the freshest *recoverable* one.
+        """
+        if step is None:
+            cached = {s for c in self.caches for s in c.steps()}
+            cached.update(self.store.steps())
+            if not cached:
+                raise FileNotFoundError("no checkpoint available")
+            last_err: Optional[Exception] = None
+            for cand in sorted(cached, reverse=True):
+                try:
+                    return self.restore(step=cand, n_nodes=n_nodes,
+                                        consumers_per_node=consumers_per_node)
+                except FileNotFoundError as e:
+                    last_err = e
+            raise last_err
+        memo: Dict[Tuple[int, int], Optional[NodeShards]] = {}
+        per_node: List[Optional[NodeShards]] = []
+        sources = {"cache": 0, "backup": 0, "store": 0, "store_full": 0}
+        store_ranks = None
+        try:
+            store_ranks = self.store.manifest(step)["n_ranks"]
+        except Exception:
+            store_ranks = None
+        for rank in range(self.cfg.n_nodes):
+            shards = None
+            if not self.fabric.is_down(rank):
+                shards = self.caches[rank].get(step)
+            if shards is not None:
+                sources["cache"] += 1
+            else:
+                # consumers on the node all want the same remote shards; the
+                # fetch is deduplicated through `memo`
+                for _ in range(max(consumers_per_node - 1, 0)):
+                    self._fetch_backup(step, rank, memo)
+                shards = self._fetch_backup(step, rank, memo)
+                if shards is not None:
+                    sources["backup"] += 1
+                elif store_ranks == self.cfg.n_nodes:
+                    shards = self.store.read_rank(step, rank)
+                    sources["store"] += 1
+                elif store_ranks is not None:
+                    # topology changed since this step was written: fall back
+                    # to a full store read in the manifest's own rank layout
+                    # (elastic reshard path)
+                    per_node = self.store.read_all(step)
+                    sources["store_full"] = 1
+                    break
+                else:
+                    raise FileNotFoundError(
+                        f"step {step}: rank {rank} unrecoverable "
+                        f"(cache lost, backup lost, not persisted)")
+            per_node.append(shards)
+        state = unshard_state(per_node)
+        with self._lock:
+            self.stats["restores"] += 1
+            self.stats["restore_sources"] = sources
+        if n_nodes is not None and n_nodes != self.cfg.n_nodes:
+            pass  # caller re-shards by constructing a new engine; state is global
+        return step, state
+
+    # ------------------------------------------------------------------ #
+    # Failure hooks (driven by TOL)
+    # ------------------------------------------------------------------ #
+    def node_failed(self, rank: int) -> None:
+        """Node crash: its cache (incl. backups it held) is gone."""
+        self.caches[rank].wipe()
+        self.fabric.fail_node(rank)
+
+    def node_recovered(self, rank: int, *, fresh: bool = True) -> None:
+        """Node rejoins (possibly a fresh machine): autonomously restore its
+        lost cache from the previous node's backup and re-backup."""
+        self.fabric.restore_node(rank)
+        if fresh:
+            self.caches[rank].wipe()
+        # pull own shards back from ring neighbour for every step it backed up
+        memo: Dict[Tuple[int, int], Optional[NodeShards]] = {}
+        holder = (rank + 1) % self.cfg.n_nodes
+        for step in self.caches[holder].steps(include_backups=True):
+            shards = self._fetch_backup(step, rank, memo)
+            if shards is not None:
+                self.caches[rank].put(step, shards)
+                self.caches[rank].mark(step, persisted=True, backed_up=True)
+        self.reconciler.kick()

@@ -1,0 +1,128 @@
+"""Declarative final-state reconciler (the paper's C++ 'kubernetes-operator-
+style' consistency mechanism).
+
+Desired state: every cached checkpoint entry eventually has
+``persisted=True`` (shards durable in the store, manifest committed) and
+``backed_up=True`` (shards replicated to the ring neighbour's cache).
+
+The reconciler never tracks in-flight work: each pass *diffs observed state
+against desired state* and (re)issues whatever is missing. Failed actions
+leave the flags unset, so the next pass retries them — idempotent by
+construction, which is what gives crash/final-state consistency.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from .cache import CacheServer
+from .store import DiskStore
+from .transport import Fabric, TransportError
+
+
+class Reconciler:
+    def __init__(self, caches: List[CacheServer], store: DiskStore,
+                 fabric: Optional[Fabric], *, backup: bool = True,
+                 interval_s: float = 0.02):
+        self.caches = caches
+        self.store = store
+        self.fabric = fabric
+        self.backup = backup
+        self.interval = interval_s
+        self._stop = threading.Event()
+        self._kick = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._committed: set = set()
+        self.errors: List[str] = []
+        self.passes = 0
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> None:
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._kick.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def kick(self) -> None:
+        self._kick.set()
+
+    def quiesce(self, timeout: float = 30.0) -> bool:
+        """Block until desired state is reached (or timeout)."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if not self._pending():
+                return True
+            self.kick()
+            time.sleep(0.005)
+        return False
+
+    # ------------------------------------------------------------------ #
+    def _pending(self) -> bool:
+        for cache in self.caches:
+            for step in cache.steps():
+                ent = cache.entry(step)
+                if ent is None or ent.is_backup:
+                    continue
+                if not ent.persisted or (self.backup and self.fabric is not None
+                                         and len(self.caches) > 1
+                                         and not ent.backed_up):
+                    return True
+        return False
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._kick.wait(timeout=self.interval)
+            self._kick.clear()
+            try:
+                self.reconcile_once()
+            except Exception as e:  # pragma: no cover
+                self.errors.append(repr(e))
+
+    # ------------------------------------------------------------------ #
+    def reconcile_once(self) -> None:
+        self.passes += 1
+        n = len(self.caches)
+        persisted_steps: Dict[int, int] = {}
+        for cache in self.caches:
+            if self.fabric is not None and self.fabric.is_down(cache.rank):
+                continue
+            for step in cache.steps():
+                ent = cache.entry(step)
+                if ent is None or ent.is_backup:
+                    continue
+                if not ent.persisted:
+                    try:
+                        shards = cache.get(step)
+                        self.store.write_rank(step, cache.rank, shards)
+                        cache.mark(step, persisted=True)
+                    except Exception as e:
+                        self.errors.append(f"persist r{cache.rank} s{step}: {e!r}")
+                if self.backup and self.fabric is not None and n > 1 \
+                        and not ent.backed_up:
+                    dst = (cache.rank + 1) % n
+                    try:
+                        shards = cache.get(step)
+                        payload = {p: d for p, (sp, d) in shards.items()}
+                        self.fabric.send(cache.rank, dst, payload)
+                        self.caches[dst].put(step, shards, is_backup=True,
+                                             owner_rank=cache.rank)
+                        cache.mark(step, backed_up=True)
+                    except TransportError as e:
+                        self.errors.append(f"backup r{cache.rank} s{step}: {e!r}")
+                ent = cache.entry(step)
+                if ent is not None and ent.persisted:
+                    persisted_steps[step] = persisted_steps.get(step, 0) + 1
+        # commit manifests for fully-persisted steps (idempotent)
+        with self._lock:
+            for step, cnt in persisted_steps.items():
+                if cnt >= n and step not in self._committed:
+                    self.store.commit(step, n)
+                    self._committed.add(step)

@@ -1,0 +1,149 @@
+"""Persistent checkpoint stores.
+
+``DiskStore`` is the reliable backing store (atomic manifest rename +
+checksums — a half-written checkpoint is never visible). ``NASStore`` wraps it
+with the paper's measured network-attached-storage bandwidth (71.1 MB/s per
+rank on SenseCore file storage) on a modelled clock, so benchmarks can report
+paper-comparable save/load latencies while the bytes really move through the
+same code path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import zlib
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .sharding import NodeShards, ShardSpec
+
+NAS_BW_PER_RANK = 71.1e6  # bytes/s — paper §IV-C: "roughly 71.1MB/s per rank"
+
+
+class SimClock:
+    """Accumulates modelled seconds (thread-safe)."""
+
+    def __init__(self):
+        self._t = 0.0
+        self._lock = threading.Lock()
+
+    def advance(self, seconds: float) -> None:
+        with self._lock:
+            self._t += seconds
+
+    @property
+    def seconds(self) -> float:
+        return self._t
+
+    def reset(self) -> None:
+        with self._lock:
+            self._t = 0.0
+
+
+class DiskStore:
+    """step -> {rank -> NodeShards}; manifest written last, atomically."""
+
+    def __init__(self, root: str):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------- #
+    def _step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    def _manifest(self, step: int) -> Path:
+        return self._step_dir(step) / "manifest.json"
+
+    # -- write ---------------------------------------------------------- #
+    def write_rank(self, step: int, rank: int, shards: NodeShards) -> int:
+        """Persist one rank's shards. Returns bytes written."""
+        d = self._step_dir(step) / f"rank_{rank:05d}"
+        d.mkdir(parents=True, exist_ok=True)
+        total = 0
+        index = []
+        for i, (path, (spec, data)) in enumerate(sorted(shards.items())):
+            data = np.ascontiguousarray(data)
+            fname = f"shard_{i:05d}.npy"
+            tmp = d / (fname + ".tmp")
+            with open(tmp, "wb") as f:
+                np.save(f, data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, d / fname)   # atomic
+            total += data.nbytes
+            index.append({"file": fname, "spec": spec.to_dict(),
+                          "crc32": int(zlib.crc32(data.tobytes()))})
+        tmp = d / "index.json.tmp"
+        tmp.write_text(json.dumps(index))
+        os.replace(tmp, d / "index.json")
+        return total
+
+    def commit(self, step: int, n_ranks: int, meta: Optional[dict] = None) -> None:
+        """Write the manifest — the checkpoint becomes visible atomically."""
+        m = {"step": step, "n_ranks": n_ranks, "meta": meta or {},
+             "time": time.time()}
+        tmp = self._manifest(step).with_suffix(".tmp")
+        tmp.write_text(json.dumps(m))
+        os.replace(tmp, self._manifest(step))
+
+    # -- read ----------------------------------------------------------- #
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.root.glob("step_*/manifest.json"):
+            try:
+                out.append(json.loads(p.read_text())["step"])
+            except Exception:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def manifest(self, step: int) -> dict:
+        return json.loads(self._manifest(step).read_text())
+
+    def read_rank(self, step: int, rank: int, verify: bool = True) -> NodeShards:
+        d = self._step_dir(step) / f"rank_{rank:05d}"
+        index = json.loads((d / "index.json").read_text())
+        out: NodeShards = {}
+        for ent in index:
+            spec = ShardSpec.from_dict(ent["spec"])
+            data = np.load(d / ent["file"])
+            if verify and int(zlib.crc32(data.tobytes())) != ent["crc32"]:
+                raise IOError(f"checksum mismatch for {spec.path} in rank {rank}")
+            out[spec.path] = (spec, data)
+        return out
+
+    def read_all(self, step: int) -> List[NodeShards]:
+        m = self.manifest(step)
+        return [self.read_rank(step, r) for r in range(m["n_ranks"])]
+
+    def delete_step(self, step: int) -> None:
+        import shutil
+        shutil.rmtree(self._step_dir(step), ignore_errors=True)
+
+
+class NASStore(DiskStore):
+    """DiskStore + modelled NAS bandwidth per rank (paper's baseline medium)."""
+
+    def __init__(self, root: str, bw_per_rank: float = NAS_BW_PER_RANK,
+                 clock: Optional[SimClock] = None):
+        super().__init__(root)
+        self.bw = bw_per_rank
+        self.clock = clock or SimClock()
+
+    def write_rank(self, step: int, rank: int, shards: NodeShards) -> int:
+        nbytes = super().write_rank(step, rank, shards)
+        self.clock.advance(nbytes / self.bw)
+        return nbytes
+
+    def read_rank(self, step: int, rank: int, verify: bool = True) -> NodeShards:
+        out = super().read_rank(step, rank, verify)
+        nbytes = sum(d.nbytes for _, d in out.values())
+        self.clock.advance(nbytes / self.bw)
+        return out

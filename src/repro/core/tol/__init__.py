@@ -1,0 +1,12 @@
+from .fsm import JobState, LauncherFSM
+from .server import TransomServer, Lease
+from .cluster import ClusterSim, Node, NodeState, FaultInjector
+from .tasks import warmup_tasks, error_check_tasks, TaskResult
+from .orchestrator import TransomOperator, JobConfig, JobReport
+
+__all__ = [
+    "JobState", "LauncherFSM", "TransomServer", "Lease",
+    "ClusterSim", "Node", "NodeState", "FaultInjector",
+    "warmup_tasks", "error_check_tasks", "TaskResult",
+    "TransomOperator", "JobConfig", "JobReport",
+]

@@ -1,0 +1,302 @@
+"""Transom Operator — the closed training loop (paper Fig. 1, right side).
+
+Wires everything together around a *real* jax train step:
+
+  launch -> warm-up -> run steps
+     - every K steps: TCE async checkpoint (no stall)
+     - every J steps: poll TEE on the live metric window
+     - on anomaly/exception: FSM -> CHECKING, run error-check tasks
+         bad node found  -> evict + anti-affinity reschedule + TCE ring-
+                            backup restore on the fresh node  (steps 9-11)
+         no bad node     -> in-place restart                   (step 8)
+       -> WARMUP -> resume from the latest cached checkpoint
+
+Each launcher holds a lease against the stateless TransomServer; the master
+launcher distributes the task suites. Modeled wall-clock costs of each phase
+are charged to a SimClock so benchmarks report cluster-scale times while the
+training itself really runs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.tce.engine import TCEngine, flatten_pytree, unflatten_like
+from repro.core.tce.store import SimClock
+from repro.core.tee.service import TEEService
+from repro.core.tee.traces import TraceGenerator
+
+from .cluster import ClusterSim, NodeState
+from .fsm import JobState, LauncherFSM
+from .server import TransomServer
+from .tasks import error_check_tasks, warmup_tasks
+
+
+class SimulatedFault(Exception):
+    def __init__(self, category: str, node_rank: int, degrades_only: bool = False):
+        super().__init__(f"{category} on rank {node_rank}")
+        self.category = category
+        self.node_rank = node_rank
+        self.degrades_only = degrades_only
+
+
+@dataclass(frozen=True)
+class PhaseCosts:
+    """Modeled seconds per recovery phase (calibrated to the paper's claims:
+    average restart ~10-12 min with TRANSOM vs hours-to-days manual)."""
+    tee_detect: float = 15.0
+    error_check: float = 90.0
+    evict_reschedule: float = 360.0
+    inplace_restart: float = 120.0
+    warmup: float = 60.0
+    restore_from_cache: float = 10.0
+    restore_from_backup: float = 16.0
+
+
+@dataclass(frozen=True)
+class JobConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    tee_every: int = 10
+    n_sim_nodes: int = 4
+    max_restarts: int = 20
+    allow_shrink: bool = False     # elastic: continue on fewer nodes when the
+    min_nodes: int = 2             # spare pool is exhausted (TCE reshards)
+    costs: PhaseCosts = PhaseCosts()
+
+
+@dataclass
+class Launcher:
+    rank: int
+    node: str
+    is_master: bool = False
+
+
+@dataclass
+class JobReport:
+    completed: bool
+    steps_done: int
+    restarts_inplace: int = 0
+    restarts_resched: int = 0
+    shrinks: int = 0
+    final_nodes: int = 0
+    evicted_nodes: List[str] = field(default_factory=list)
+    modeled_downtime_s: float = 0.0
+    modeled_restart_times: List[float] = field(default_factory=list)
+    state_history: List[Tuple[float, str, str]] = field(default_factory=list)
+    lost_steps: int = 0
+    tee_verdicts: int = 0
+
+    @property
+    def mean_restart_s(self) -> float:
+        return float(np.mean(self.modeled_restart_times)) \
+            if self.modeled_restart_times else 0.0
+
+
+class TransomOperator:
+    def __init__(self, server: TransomServer, cluster: ClusterSim,
+                 tce: TCEngine, tee: Optional[TEEService] = None,
+                 clock: Optional[SimClock] = None, verbose: bool = False):
+        self.server = server
+        self.cluster = cluster
+        self.tce = tce
+        self.tee = tee
+        self.clock = clock or SimClock()
+        self.verbose = verbose
+        self.launchers: List[Launcher] = []
+        self.fsm = LauncherFSM()
+
+    # ------------------------------------------------------------------ #
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(f"[TOL {self.fsm.state.value:>16s}] {msg}")
+
+    def _spawn_launchers(self, n: int) -> None:
+        self.launchers = [Launcher(r, self.cluster.assigned[r])
+                          for r in range(n)]
+        self._elect()
+
+    def _elect(self) -> None:
+        for l in self.launchers:
+            lease = self.server.acquire("job-master", l.rank)
+            l.is_master = lease is not None and lease.holder == l.rank
+        master = [l for l in self.launchers if l.is_master]
+        self._log(f"elected master: rank {master[0].rank if master else '?'}")
+
+    def _rank_to_node(self) -> Dict[int, str]:
+        return {l.rank: l.node for l in self.launchers}
+
+    # ------------------------------------------------------------------ #
+    def run_job(self, cfg: JobConfig, init_state,
+                step_fn: Callable,
+                fault_hook: Optional[Callable[[int], None]] = None,
+                trace_gen: Optional[TraceGenerator] = None) -> JobReport:
+        """Run `total_steps` of `step_fn(state, step) -> state` under full
+        TOL+TEE+TCE protection. `fault_hook(step)` may raise SimulatedFault."""
+        report = JobReport(False, 0)
+        self._spawn_launchers(cfg.n_sim_nodes)
+        state = init_state
+        step = 0
+        trace_gen = trace_gen or TraceGenerator(n_ranks=cfg.n_sim_nodes)
+
+        self.fsm.to(JobState.WARMUP, "initial launch")
+        self._warmup(cfg, report)
+        self.fsm.to(JobState.RUNNING, "warmup passed")
+
+        pending_fault: Optional[SimulatedFault] = None
+        while step < cfg.total_steps and not self.fsm.terminal:
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)
+                state = step_fn(state, step)
+                step += 1
+                report.steps_done = step
+                if step % cfg.ckpt_every == 0:
+                    self.tce.save(step, state)   # async: no training stall
+                # TEE periodic poll: in real deployments this reads live
+                # metrics; here a verdict only fires when a fault is pending
+                if self.tee is not None and step % cfg.tee_every == 0:
+                    report.tee_verdicts += 1
+                continue
+            except SimulatedFault as f:
+                pending_fault = f
+
+            # ---------------- recovery path ---------------- #
+            if report.restarts_inplace + report.restarts_resched \
+                    >= cfg.max_restarts:
+                self.fsm.to(JobState.FAILED, "restart budget exhausted")
+                break
+            t_down = cfg.costs.tee_detect
+            self.fsm.to(JobState.CHECKING, str(pending_fault))
+            self._log(f"anomaly at step {step}: {pending_fault}")
+
+            # TEE window scoring for node attribution
+            bad_ranks: List[int] = []
+            if self.tee is not None and pending_fault is not None:
+                tr = trace_gen.faulty(pending_fault.category, T=240,
+                                      onset=120, n_bad=1)
+                # align injected rank with the fault
+                tr.bad_ranks = (pending_fault.node_rank,)
+                v = self.tee.detect_task(tr)
+                report.tee_verdicts += 1
+                if v.anomalous:
+                    bad_ranks = [pending_fault.node_rank]
+            checks = error_check_tasks(self.cluster, bad_ranks,
+                                       self._rank_to_node())
+            t_down += cfg.costs.error_check
+            # TEE attribution is advisory (paper §IV-B: "confirmation of error
+            # nodes relies on the TOL system"); only hardware/infra checks
+            # justify eviction. TEE narrows which flagged node to evict first.
+            hw_bad = {n for c in checks if c.name != "tee_attribution"
+                      for n in c.bad_nodes}
+            tee_bad = {n for c in checks if c.name == "tee_attribution"
+                       for n in c.bad_nodes}
+            bad_nodes = sorted(hw_bad, key=lambda n: (n not in tee_bad, n))
+
+            if bad_nodes:
+                self.fsm.to(JobState.RESCHEDULING, f"evict {bad_nodes}")
+                for n in bad_nodes:
+                    self.server.report_bad_node(n)
+                    self.cluster.evict(n, self.clock.seconds)
+                    for l in self.launchers:
+                        if l.node == n:
+                            self.tce.node_failed(l.rank)
+                            report.evicted_nodes.append(n)
+                replaced = True
+                for l in list(self.launchers):
+                    if l.node in bad_nodes:
+                        new = self.cluster.schedule_replacement(
+                            self.server.bad_nodes())
+                        if new is None:
+                            replaced = False
+                            break
+                        l.node = new
+                        self.tce.node_recovered(l.rank)   # ring-backup pull
+                if not replaced:
+                    if cfg.allow_shrink and \
+                            len(self.launchers) - 1 >= cfg.min_nodes:
+                        # elastic shrink: drop the dead rank, reshard the
+                        # checkpoint engine onto the surviving nodes
+                        self._shrink(bad_nodes)
+                        report.shrinks += 1
+                        self._log(f"elastic shrink -> {len(self.launchers)} nodes")
+                    else:
+                        self.fsm.to(JobState.FAILED, "no replacement nodes")
+                        break
+                self._elect()
+                t_down += cfg.costs.evict_reschedule + cfg.costs.restore_from_backup
+                report.restarts_resched += 1
+            else:
+                self.fsm.to(JobState.RECOVER_INPLACE, "no bad node found")
+                t_down += cfg.costs.inplace_restart + cfg.costs.restore_from_cache
+                report.restarts_inplace += 1
+
+            # restore from the freshest checkpoint (memory-first waterfall).
+            # All nodes are healthy again here: give the reconciler a bounded
+            # window to finish in-flight persists/backups so the newest step
+            # is recoverable when possible (a fault racing a save still falls
+            # back one interval — the paper's "near-simultaneous" caveat).
+            self.tce.reconciler.quiesce(10)
+            try:
+                ck_step, flat = self.tce.restore()
+            except FileNotFoundError:
+                ck_step, flat = 0, None
+            if flat is not None:
+                state = unflatten_like(init_state, flat)
+            else:
+                state = init_state
+            report.lost_steps += step - ck_step
+            step = ck_step
+            report.steps_done = step
+
+            self.fsm.to(JobState.WARMUP, "recovered")
+            self._warmup(cfg, report)
+            t_down += cfg.costs.warmup
+            self.fsm.to(JobState.RUNNING, f"resumed from step {ck_step}")
+            self.clock.advance(t_down)
+            report.modeled_downtime_s += t_down
+            report.modeled_restart_times.append(t_down)
+            pending_fault = None
+
+        if step >= cfg.total_steps and not self.fsm.terminal:
+            self.fsm.to(JobState.DONE, "target steps reached")
+            report.completed = True
+        report.final_nodes = len(self.launchers)
+        report.state_history = [(t, s.value, r) for t, s, r in self.fsm.history]
+        return report, state
+
+    def _shrink(self, bad_nodes) -> None:
+        """Rebuild the TCE engine on the surviving nodes; the latest durable
+        checkpoint reshards onto the smaller ring (store_full path)."""
+        from repro.core.tce.engine import TCEngine, TCEConfig
+
+        survivors = [l for l in self.launchers if l.node not in bad_nodes]
+        self.tce.reconciler.quiesce(30)
+        old = self.tce
+        cfg = old.cfg
+        old.close()
+        self.tce = TCEngine(
+            TCEConfig(n_nodes=len(survivors),
+                      mem_limit_bytes=cfg.mem_limit_bytes,
+                      max_cycles=cfg.max_cycles, backup=cfg.backup,
+                      async_persist=cfg.async_persist,
+                      copy_threads=cfg.copy_threads, mem_bw=cfg.mem_bw),
+            old.store, clock=self.clock)
+        for new_rank, l in enumerate(survivors):
+            l.rank = new_rank
+        self.launchers = survivors
+
+    # ------------------------------------------------------------------ #
+    def _warmup(self, cfg: JobConfig, report: JobReport) -> None:
+        results = warmup_tasks(self.cluster)
+        failed = [r for r in results if not r.ok]
+        if failed:
+            bad = sorted({n for r in failed for n in r.bad_nodes})
+            self._log(f"warmup found bad nodes: {bad}")
+            for n in bad:
+                self.server.report_bad_node(n)
+                self.cluster.evict(n, self.clock.seconds)
+                self.cluster.schedule_replacement(self.server.bad_nodes())

@@ -1,0 +1,127 @@
+"""Warm-up and error-check task suites (paper §IV-A task types 1 & 3).
+
+Warm-up runs before every (re)start; error-check runs when the master is
+notified of an anomaly. Both are *real* checks against the local jax runtime
+(device burn-in = small matmul vs numpy oracle; collective check = psum over
+the local mesh vs the analytic value), plus simulated per-node checks against
+the ClusterSim (disk, link) so tests can inject failures.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .cluster import ClusterSim, NodeState
+
+
+@dataclass
+class TaskResult:
+    name: str
+    ok: bool
+    detail: str = ""
+    bad_nodes: List[str] = field(default_factory=list)
+    elapsed_s: float = 0.0
+
+
+def _timed(fn):
+    def wrap(*a, **k) -> TaskResult:
+        t0 = time.perf_counter()
+        r = fn(*a, **k)
+        r.elapsed_s = time.perf_counter() - t0
+        return r
+    return wrap
+
+
+# --------------------------------------------------------------------------- #
+# Real local-runtime checks
+# --------------------------------------------------------------------------- #
+@_timed
+def disk_check(paths: List[str]) -> TaskResult:
+    """Datasets/code mounted and readable."""
+    missing = [p for p in paths if not os.path.exists(p)]
+    return TaskResult("disk_check", not missing,
+                      f"missing: {missing}" if missing else "all paths ok")
+
+
+@_timed
+def device_burn_in(size: int = 256, iters: int = 2) -> TaskResult:
+    """Small matmul on every local device, checked against a numpy oracle."""
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((size, size), np.float32)
+    b = rng.standard_normal((size, size), np.float32)
+    want = a @ b
+    bad = []
+    for d in jax.local_devices():
+        for _ in range(iters):
+            got = np.asarray(jax.device_put(jnp.asarray(a), d) @ jnp.asarray(b))
+            if not np.allclose(got, want, rtol=1e-3, atol=1e-3):
+                bad.append(str(d))
+                break
+    return TaskResult("device_burn_in", not bad,
+                      f"bad devices: {bad}" if bad else
+                      f"{len(jax.local_devices())} devices ok", bad)
+
+
+@_timed
+def collective_check() -> TaskResult:
+    """psum across all local devices vs the analytic value (NCCL-test analogue)."""
+    import jax
+    import jax.numpy as jnp
+    n = len(jax.local_devices())
+    if n == 1:
+        x = jnp.ones((8,))
+        ok = bool(jnp.allclose(x.sum(), 8.0))
+        return TaskResult("collective_check", ok, "single-device trivial pass")
+    out = jax.pmap(lambda x: jax.lax.psum(x, "i"), axis_name="i")(
+        jnp.ones((n, 8)))
+    ok = bool(np.allclose(np.asarray(out), n))
+    return TaskResult("collective_check", ok, f"psum over {n} devices")
+
+
+# --------------------------------------------------------------------------- #
+# Simulated per-node checks (ClusterSim-aware)
+# --------------------------------------------------------------------------- #
+@_timed
+def node_health_check(cluster: ClusterSim) -> TaskResult:
+    bad = cluster.bad_assigned_nodes()
+    return TaskResult("node_health_check", not bad,
+                      f"bad: {bad}" if bad else "all assigned nodes healthy", bad)
+
+
+@_timed
+def connectivity_check(cluster: ClusterSim) -> TaskResult:
+    bad = [n for n in cluster.assigned
+           if cluster.nodes[n].state == NodeState.DEGRADED
+           and cluster.nodes[n].fail_category == "network"]
+    return TaskResult("connectivity_check", not bad,
+                      f"link issues: {bad}" if bad else "fabric ok", bad)
+
+
+# --------------------------------------------------------------------------- #
+def warmup_tasks(cluster: Optional[ClusterSim] = None,
+                 data_paths: Optional[List[str]] = None) -> List[TaskResult]:
+    out = [disk_check(data_paths or ["."]), device_burn_in(), collective_check()]
+    if cluster is not None:
+        out += [node_health_check(cluster), connectivity_check(cluster)]
+    return out
+
+
+def error_check_tasks(cluster: Optional[ClusterSim] = None,
+                      tee_bad_ranks: Optional[List[int]] = None,
+                      rank_to_node: Optional[Dict[int, str]] = None
+                      ) -> List[TaskResult]:
+    out = [disk_check(["."]), device_burn_in(), collective_check()]
+    if cluster is not None:
+        out += [node_health_check(cluster), connectivity_check(cluster)]
+    if tee_bad_ranks and rank_to_node:
+        nodes = sorted({rank_to_node[r] for r in tee_bad_ranks
+                        if r in rank_to_node})
+        out.append(TaskResult("tee_attribution", not nodes,
+                              f"TEE flags: {nodes}", nodes))
+    return out

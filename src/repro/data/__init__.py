@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, DataState
+
+__all__ = ["SyntheticLMData", "DataState"]

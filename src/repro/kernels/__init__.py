@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper, auto-interpret off-TPU), and ref.py (pure-jnp
+oracle used by the per-kernel shape/dtype sweeps in tests/test_kernels.py).
+
+  flash_attention   blocked online-softmax attention (FA-2 schedule, causal+GQA)
+  ssd_scan          Mamba-2 chunked state-space-dual scan
+  quant_blockwise   int8 blockwise quantisation (grad compression, int8 Adam)
+"""

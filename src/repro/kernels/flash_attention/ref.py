@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Exact attention. q: (B, S, H, D); k, v: (B, T, KH, D), H = KH * rep."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    qh = q.reshape(b, s, kh, rep, d)
+    scale = 1.0 / jnp.sqrt(jnp.array(d, jnp.float32))
+    scores = jnp.einsum("bqkrd,btkd->bkrqt", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkrqt,btkd->bqkrd", w.astype(v.dtype), v)
+    return o.reshape(b, s, h, d)

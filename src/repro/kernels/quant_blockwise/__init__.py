@@ -1,0 +1,5 @@
+from .ops import quantize_blockwise, dequantize_blockwise
+from .ref import quantize_reference, dequantize_reference
+
+__all__ = ["quantize_blockwise", "dequantize_blockwise",
+           "quantize_reference", "dequantize_reference"]

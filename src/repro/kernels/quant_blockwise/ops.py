@@ -1,0 +1,47 @@
+"""jit'd wrappers: arbitrary-shape leaves are flattened to (n, d) tiles with
+padding; auto-interpret off-TPU."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quant_blockwise import dequantize_blockwise_2d, quantize_blockwise_2d
+
+
+def _to_2d(x: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_blockwise(x: jax.Array, block: int = 256,
+                       interpret: Optional[bool] = None):
+    """Any-shape x -> (q int8 (n_blocks, block), s (n_blocks,), pad)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2, pad = _to_2d(x, block)
+    q, s = quantize_blockwise_2d(x2, block=block,
+                                 row_tile=min(256, x2.shape[0]),
+                                 interpret=interpret)
+    return q, s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block", "dtype", "interpret"))
+def dequantize_blockwise(q: jax.Array, s: jax.Array, shape,
+                         block: int = 256, dtype=jnp.float32,
+                         interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x2 = dequantize_blockwise_2d(q, s[:, None], block=block,
+                                 row_tile=min(256, q.shape[0]),
+                                 dtype=dtype, interpret=interpret)
+    n = 1
+    for d in shape:
+        n *= d
+    return x2.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for blockwise int8 quantisation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_reference(x: jax.Array, block: int = 256):
+    """x: (..., d) with d % block == 0 -> (q int8 same shape,
+    scales (..., d // block) f32). Symmetric absmax per block."""
+    *lead, d = x.shape
+    assert d % block == 0
+    xb = x.astype(jnp.float32).reshape(*lead, d // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    s = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / s[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, d), s
+
+
+def dequantize_reference(q: jax.Array, s: jax.Array, block: int = 256,
+                         dtype=jnp.float32):
+    *lead, d = q.shape
+    qb = q.reshape(*lead, d // block, block).astype(jnp.float32)
+    return (qb * s[..., None]).reshape(*lead, d).astype(dtype)

@@ -1,0 +1,2 @@
+"""Oracle for the SSD scan kernel — the model's chunked jnp implementation."""
+from repro.models.ssm import ssd_chunked as ssd_reference  # noqa: F401

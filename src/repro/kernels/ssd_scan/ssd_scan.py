@@ -1,0 +1,112 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (batch, n_chunks); chunks are the sequential (`arbitrary`) dimension
+with the inter-chunk SSM state carried in VMEM scratch — the TPU-native
+re-blocking of the GPU scan: intra-chunk terms are dense (c x c) and
+(c x p x n) contractions that map onto the MXU, the recurrence touches VMEM
+only once per chunk.
+
+Working set per grid step (c=128, nh<=128, p=64, n<=128):
+  x/dt/B/C blocks + (nh, c, c) decay matrix + (nh, p, n) state  <~ 4 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hf_ref, state_scr,
+                *, chunk: int, n_chunks: int, rep: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # (c, nh, p)
+    dt = dt_ref[0].astype(jnp.float32)        # (c, nh)
+    A = a_ref[...].astype(jnp.float32)        # (nh,)
+    Bc = b_ref[0].astype(jnp.float32)         # (c, g, n)
+    Cc = c_ref[0].astype(jnp.float32)         # (c, g, n)
+
+    c = x.shape[0]
+    dA = dt * A[None, :]                      # (c, nh)
+    cum = jnp.cumsum(dA, axis=0)              # (c, nh)
+    xdt = x * dt[..., None]                   # (c, nh, p)
+
+    Bh = jnp.repeat(Bc, rep, axis=1)          # (c, nh, n)
+    Ch = jnp.repeat(Cc, rep, axis=1)
+
+    # L[h, i, j'] = exp(cum[i,h] - cum[j',h]) masked to j' <= i
+    diff = cum.T[:, :, None] - cum.T[:, None, :]          # (nh, c, c)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    L = jnp.where(tri[None], jnp.exp(diff), 0.0)
+
+    CB = jnp.einsum("ihn,jhn->hij", Ch, Bh,
+                    preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("hij,jhp->ihp", CB * L, xdt,
+                         preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                                # (nh, p, n)
+    sdec = jnp.exp(cum)                                   # (c, nh)
+    y_inter = jnp.einsum("ihn,hpn,ih->ihp", Ch, state, sdec,
+                         preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    cdec = jnp.exp(cum[-1])                               # (nh,)
+    ddec = jnp.exp(cum[-1][None, :] - cum)                # (c, nh)
+    s_new = jnp.einsum("jhn,jh,jhp->hpn", Bh, ddec, xdt,
+                       preferred_element_type=jnp.float32)
+    state_scr[...] = state * cdec[:, None, None] + s_new
+
+    @pl.when(j == n_chunks - 1)
+    def _finish():
+        hf_ref[0] = state_scr[...]
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    B: jax.Array, C: jax.Array, *, chunk: int = 128,
+                    init_state=None, interpret: bool = False):
+    """x: (b, s, nh, p); dt: (b, s, nh); A: (nh,); B, C: (b, s, g, n).
+    Returns (y: (b, s, nh, p), final_state: (b, nh, p, n) f32)."""
+    b, s, nh, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = nh // g
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    if init_state is None:
+        init_state = jnp.zeros((b, nh, p, n), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=c, n_chunks=nc, rep=rep)
+    y, hf = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, nh, p), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, c, nh), lambda b_, j: (b_, j, 0)),
+            pl.BlockSpec((nh,), lambda b_, j: (0,)),
+            pl.BlockSpec((1, c, g, n), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, c, g, n), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, nh, p, n), lambda b_, j: (b_, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, nh, p), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, nh, p, n), lambda b_, j: (b_, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, nh, p), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C, init_state)
+    return y, hf

@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline inputs.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) so the
+two lines above execute before jax locks the device count. Results are cached
+incrementally as JSON under results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_cells
+from repro.launch import hloparse
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.specs import input_specs
+from repro.models import ModelConfig
+from repro.parallel import sharding as shd
+from repro.serve.engine import decode_fn, prefill_fn, serve_param_shapes
+from repro.train import (AdamConfig, TrainConfig, make_train_step,
+                         train_state_axes, train_state_shapes)
+
+
+# --------------------------------------------------------------------------- #
+# Per-arch production training policy (memory levers for the big models)
+# --------------------------------------------------------------------------- #
+def default_opt_config(cfg: ModelConfig) -> AdamConfig:
+    n = cfg.n_params()
+    if n > 100e9:      # deepseek-v3: pure-bf16 params + int8 moments
+        return AdamConfig(moment_dtype="int8", stochastic_round_params=True)
+    if n > 20e9:       # yi-34b / jamba-52b: bf16 moments
+        return AdamConfig(moment_dtype="bfloat16")
+    return AdamConfig()
+
+
+def train_model_config(cfg: ModelConfig) -> ModelConfig:
+    if cfg.n_params() > 100e9:
+        return dataclasses.replace(cfg, param_dtype="bfloat16")
+    return cfg
+
+
+# --------------------------------------------------------------------------- #
+# Cell runner
+# --------------------------------------------------------------------------- #
+def _analytic_state_bytes(shapes, axes, mesh, rules=None) -> int:
+    specs = shd.tree_specs(axes, shapes, mesh, rules)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(sds, spec):
+        shards = 1
+        for entry in spec:
+            for ax in ((entry,) if isinstance(entry, str) else (entry or ())):
+                shards *= mesh_shape[ax]
+        return sds.size * sds.dtype.itemsize / shards
+
+    leaves = jax.tree.leaves(jax.tree.map(one, shapes, specs,
+                                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+    return int(sum(leaves))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_overrides=None, save_hlo: bool = False,
+             out_dir: Path = Path("results/dryrun"),
+             tcfg: TrainConfig = None, rules_preset: str = "megatron",
+             moe_impl: str = None, remat_policy: str = None) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod512" if multi_pod else "pod256"
+    n_chips = mesh.devices.size
+    base_cfg = get_config(arch)
+    if moe_impl and base_cfg.moe is not None:
+        base_cfg = dataclasses.replace(
+            base_cfg, moe=dataclasses.replace(base_cfg.moe, impl=moe_impl))
+    if remat_policy:
+        base_cfg = dataclasses.replace(base_cfg, remat_policy=remat_policy)
+    rules = shd.RULES_PRESETS[rules_preset]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "status": "ok", "rules": rules_preset}
+    t0 = time.time()
+
+    with shd.use_sharding(mesh, rules) as ctx:
+        if shape.kind == "train":
+            cfg = train_model_config(base_cfg)
+            opt_cfg = default_opt_config(cfg)
+            if opt_overrides:
+                opt_cfg = dataclasses.replace(opt_cfg, **opt_overrides)
+            tcfg = tcfg or TrainConfig()
+            state_shapes = train_state_shapes(cfg, opt_cfg)
+            state_axes = train_state_axes(cfg, opt_cfg)
+            state_sh = shd.tree_shardings(state_axes, state_shapes, mesh, rules)
+            inputs, in_axes = input_specs(cfg, shape)
+            batch_sh = shd.tree_shardings(in_axes["batch"], inputs["batch"], mesh, rules)
+            step = make_train_step(cfg, opt_cfg, tcfg, mesh=mesh)
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+            args = (state_shapes, inputs["batch"])
+            rec["opt"] = {"moment_dtype": opt_cfg.moment_dtype,
+                          "param_dtype": cfg.param_dtype,
+                          "compress_pod_grads": tcfg.compress_pod_grads}
+            state_bytes = _analytic_state_bytes(state_shapes, state_axes, mesh, rules)
+        else:
+            cfg = base_cfg
+            p_shapes = serve_param_shapes(cfg)
+            p_axes = jax.tree.map(lambda _: None, p_shapes)  # placeholder
+            from repro.models import param_axes
+            p_axes = param_axes(cfg)
+            p_sh = shd.tree_shardings(p_axes, p_shapes, mesh, rules)
+            inputs, in_axes = input_specs(cfg, shape)
+            if shape.kind == "prefill":
+                batch_sh = shd.tree_shardings(in_axes["batch"], inputs["batch"], mesh, rules)
+                fn = jax.jit(lambda p, b: prefill_fn(p, cfg, b),
+                             in_shardings=(p_sh, batch_sh))
+                args = (p_shapes, inputs["batch"])
+                state_bytes = _analytic_state_bytes(p_shapes, p_axes, mesh, rules)
+            else:
+                tok_sh = shd.tree_shardings(in_axes["token"], inputs["token"], mesh, rules)
+                cache_sh = shd.tree_shardings(in_axes["cache"], inputs["cache"], mesh, rules)
+                pos_sh = shd.tree_shardings(in_axes["pos"], inputs["pos"], mesh, rules)
+                fn = jax.jit(lambda p, t, c, q: decode_fn(p, cfg, t, c, q),
+                             in_shardings=(p_sh, tok_sh, cache_sh, pos_sh),
+                             donate_argnums=(2,))
+                args = (p_shapes, inputs["token"], inputs["cache"], inputs["pos"])
+                state_bytes = (_analytic_state_bytes(p_shapes, p_axes, mesh, rules)
+                               + _analytic_state_bytes(inputs["cache"], in_axes["cache"], mesh, rules))
+
+        lowered = fn.lower(*args)
+        rec["t_lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t1, 2)
+
+    # ---- analyses -------------------------------------------------------- #
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis"] = {"error": str(e)}
+    rec["analytic_state_bytes_per_device"] = state_bytes
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    rec["hlo_lines"] = hlo.count("\n")
+    # trip-count-aware per-device stats (cost_analysis counts loop bodies once)
+    stats = hloparse.analyze(hlo)
+    rec["hlo_stats"] = stats.to_dict()
+
+    # ---- roofline terms --------------------------------------------------- #
+    flops = stats.flops
+    bytes_acc = stats.traffic_bytes
+    wire = stats.collective_wire_bytes
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": wire / ICI_BW,
+        "n_chips": n_chips,
+    }
+    n_params = base_cfg.n_params()
+    n_active = base_cfg.n_active_params()
+    gb, sl = shape.global_batch, shape.seq_len
+    tokens = gb * sl if shape.kind != "decode" else gb
+    mult = 6 if shape.kind == "train" else 2
+    rec["model_flops_total"] = mult * n_active * tokens
+    rec["model_flops_per_chip"] = rec["model_flops_total"] / n_chips
+    if flops:
+        rec["useful_flops_ratio"] = rec["model_flops_per_chip"] / flops
+
+    if save_hlo:
+        hdir = out_dir / mesh_name / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        (hdir / f"{arch}__{shape_name}.hlo.txt").write_text(hlo)
+    return rec
+
+
+def cell_path(out_dir: Path, mesh_name: str, arch: str, shape_name: str) -> Path:
+    return out_dir / mesh_name / f"{arch}__{shape_name}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--moment-dtype", default=None)
+    ap.add_argument("--rules", default="megatron")
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--remat", default=None, help="full|dots|none")
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cells = shape_cells(arch)
+        shapes = cells if args.shape == "all" else [s for s in args.shape.split(",")]
+        for shape_name in shapes:
+            if shape_name not in cells:
+                print(f"SKIP {arch} {shape_name} (not assigned: quadratic-attn "
+                      f"archs skip long_500k)")
+                n_skip += 1
+                continue
+            for mp in meshes:
+                mesh_name = "pod512" if mp else "pod256"
+                path = cell_path(out_dir, mesh_name, arch, shape_name)
+                if path.exists() and not args.force:
+                    print(f"CACHED {mesh_name} {arch} {shape_name}")
+                    continue
+                print(f"RUN {mesh_name} {arch} {shape_name} ...", flush=True)
+                try:
+                    overrides = ({"moment_dtype": args.moment_dtype}
+                                 if args.moment_dtype else None)
+                    tcfg = TrainConfig(compress_pod_grads=args.compress_pod_grads and mp)
+                    rec = run_cell(arch, shape_name, mp, opt_overrides=overrides,
+                                   save_hlo=args.save_hlo, out_dir=out_dir,
+                                   tcfg=tcfg, rules_preset=args.rules,
+                                   moe_impl=args.moe_impl,
+                                   remat_policy=args.remat)
+                    n_ok += 1
+                except Exception:
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "error", "traceback": traceback.format_exc()}
+                    n_fail += 1
+                path.parent.mkdir(parents=True, exist_ok=True)
+                path.write_text(json.dumps(rec, indent=2))
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    ma = rec.get("memory_analysis", {})
+                    print(f"  ok: compile={rec['t_compile_s']}s "
+                          f"flops/chip={rec['hlo_stats']['flops']:.3e} "
+                          f"compute={r['compute_s']*1e3:.2f}ms "
+                          f"mem={r['memory_s']*1e3:.2f}ms "
+                          f"coll={r['collective_s']*1e3:.2f}ms "
+                          f"args={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB",
+                          flush=True)
+                else:
+                    print(f"  FAIL:\n{rec['traceback'][-2000:]}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

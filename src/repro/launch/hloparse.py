@@ -1,0 +1,292 @@
+"""Trip-count-aware post-SPMD HLO analyzer.
+
+``jax.stages.Compiled.cost_analysis()`` counts while-loop bodies **once**, so
+for scan-over-layers programs it under-reports flops/bytes/collectives by the
+layer count. This walker parses the HLO text, builds a per-computation symbol
+table, and walks from ENTRY multiplying through every ``while`` body by its
+``backend_config known_trip_count`` — giving accurate *per-device* numbers
+(post-SPMD shapes are per-partition):
+
+  flops          2*M*N*K dot flops (+conv), remat & redundancy included
+  traffic_bytes  fused HBM traffic model: operand+result bytes of material
+                 ops (dot/fusion/copy/reduce/gather/scatter/slice/dus/...),
+                 elementwise interiors of fusions are free (register-level)
+  collectives    per-kind counts/result/wire bytes (ring-model wire factors)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+    "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# op kinds whose RESULT counts as HBM traffic (materialization points).
+# Traffic model: every materialised tensor is written once and read once by
+# its consumer(s) -> output_bytes * 2. Operand-side counting would multi-count
+# tensors consumed by several small CPU kLoop fusions that a TPU pipeline
+# would fuse into one. convert/broadcast/iota/transpose are excluded as they
+# fuse into consumers on TPU.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "copy", "reduce", "reduce-window",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice", "slice",
+    "concatenate", "pad", "select-and-scatter", "sort", "rng",
+    "rng-bit-generator", "reverse", "cholesky", "triangular-solve",
+} | set(COLLECTIVES)
+
+# ops that are free (views / bookkeeping)
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "partition-id", "replica-id", "bitcast-convert",
+             "reshape", "custom-call", "optimization-barrier"}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\],]+(?:\{[\d,]*\})?)\s+([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count["\']?:\s*\{["\']?n["\']?:\s*["\']?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_SIG_RE = re.compile(r"([\w.\-]+)\s*:\s*(\([^()]*\)|[\w\[\],]+(?:\{[\d,]*\})?)")
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        bt = _DTYPE_BYTES.get(dt)
+        if bt is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * bt
+    # scalar like "f32[]" has empty dims -> product 1 handled above; plain
+    # scalars printed as "f32[]" always match; bare "f32" (rare) ignored.
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d.strip()]
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instruction] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                is_entry = bool(m.group(1))
+                cur = Computation(m.group(2), is_entry)
+                # add signature params to symbol table
+                sig = line[line.find("(") + 1:line.rfind(") ->")]
+                for pname, ptype in _PARAM_SIG_RE.findall(sig):
+                    cur.symbols[pname] = ptype
+                if is_entry:
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, op = m.groups()
+            cur.symbols[name] = type_str
+            cur.instrs.append(Instruction(name, type_str, op, line))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(
+        default_factory=lambda: defaultdict(lambda: {
+            "count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0}))
+    warnings: List[str] = field(default_factory=list)
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(s["wire_bytes"] for s in self.collectives.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "traffic_bytes": self.traffic_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collectives": {k: dict(v) for k, v in self.collectives.items()},
+            "warnings": self.warnings[:20],
+        }
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    sd = _shape_dims(ins.type_str)
+    if sd is None:
+        return 0.0
+    _, out_dims = sd
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contracting size from lhs operand shape
+    cm = _CONTRACT_RE.search(ins.line)
+    paren = ins.line[ins.line.find("(", ins.line.find(ins.op)) + 1:]
+    ops = _OPERAND_RE.findall(paren.split(")")[0])
+    k = 1
+    if cm and ops:
+        lhs_type = comp.symbols.get(ops[0])
+        if lhs_type:
+            sd_l = _shape_dims(lhs_type)
+            if sd_l:
+                _, ldims = sd_l
+                for idx in cm.group(1).split(","):
+                    if idx.strip():
+                        i = int(idx)
+                        if i < len(ldims):
+                            k *= ldims[i]
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(ins: Instruction, comp: Computation) -> float:
+    paren = ins.line[ins.line.find("(", ins.line.find(ins.op)) + 1:]
+    # take operands up to the matching close paren heuristically: first ')'
+    ops = _OPERAND_RE.findall(paren.split(")")[0])
+    total = 0.0
+    for name in ops:
+        t = comp.symbols.get(name)
+        if t:
+            total += _type_bytes(t)
+    return total
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_computations(text)
+    stats = HloStats()
+    if entry is None:
+        stats.warnings.append("no ENTRY computation found")
+        return stats
+
+    def walk(comp_name: str, mult: float, flops_only: bool = False,
+             depth: int = 0):
+        comp = comps.get(comp_name)
+        if comp is None or depth > 12:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                bm = _BODY_RE.search(ins.line)
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                if tm is None:
+                    stats.warnings.append(f"while without trip count in {comp_name}")
+                if bm:
+                    walk(bm.group(1), mult * trip, flops_only, depth + 1)
+                cm_ = _COND_RE.search(ins.line)
+                if cm_:
+                    walk(cm_.group(1), mult * trip, True, depth + 1)
+                continue
+            if op == "conditional":
+                for callee in _OPERAND_RE.findall(
+                        ins.line[ins.line.find("branch"):] if "branch" in ins.line else ""):
+                    if callee in comps:
+                        walk(callee, mult, flops_only, depth + 1)
+                continue
+            if op in ("call", "async-start"):
+                cm_ = _CALLS_RE.search(ins.line) or _BODY_RE.search(ins.line)
+                if cm_ and cm_.group(1) in comps:
+                    walk(cm_.group(1), mult, flops_only, depth + 1)
+                continue
+            if op == "dot":
+                stats.flops += mult * _dot_flops(ins, comp)
+            elif op == "convolution":
+                # approximate: 2 * out_elems * (k taken as operand1 reduced size)
+                sd = _shape_dims(ins.type_str)
+                if sd:
+                    out_elems = 1
+                    for d in sd[1]:
+                        out_elems *= d
+                    stats.flops += mult * 2.0 * out_elems  # lower bound
+            elif op == "fusion":
+                # dots can hide inside fusions on some backends
+                cm_ = _CALLS_RE.search(ins.line)
+                if cm_ and cm_.group(1) in comps:
+                    walk(cm_.group(1), mult, True, depth + 1)
+
+            if flops_only:
+                continue
+            if op in COLLECTIVES or (op.endswith("-start") and op[:-6] in COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                rbytes = _type_bytes(ins.type_str)
+                if op.endswith("-start"):
+                    rbytes /= 2  # start tuples carry (operand, result)
+                g = _GROUPS_RE.search(ins.line)
+                if g:
+                    n = len(g.group(1).split(","))
+                else:
+                    gi = _GROUPS_IOTA_RE.search(ins.line)
+                    n = int(gi.group(2)) if gi else 0
+                c = stats.collectives[kind]
+                c["count"] += mult
+                c["result_bytes"] += mult * rbytes
+                c["wire_bytes"] += mult * rbytes * _wire_factor(kind, n)
+                stats.traffic_bytes += mult * 2 * rbytes
+                continue
+            if op in _TRAFFIC_OPS:
+                stats.traffic_bytes += mult * 2 * _type_bytes(ins.type_str)
+
+    walk(entry, 1.0)
+    stats.collectives = {k: dict(v) for k, v in stats.collectives.items()}
+    return stats

@@ -1,0 +1,102 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Runs the real train step (pjit on whatever mesh exists — 1 CPU device here,
+the production mesh on a pod), checkpoints through TCE asynchronously, and
+resumes from the freshest checkpoint on restart. The full fault-tolerant
+closed loop (TOL+TEE driving this loop) is examples/fault_tolerant_training.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.tce import DiskStore, TCEngine, TCEConfig
+from repro.core.tce.engine import flatten_pytree, unflatten_like
+from repro.data import SyntheticLMData
+from repro.train import (AdamConfig, TrainConfig, init_train_state,
+                         make_train_step)
+
+
+def scale_config(cfg, args):
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-nodes", type=int, default=4)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = scale_config(get_config(args.arch), args)
+    opt_cfg = AdamConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                         decay_steps=args.steps)
+    print(f"arch={cfg.name} params={cfg.n_params():,} devices={jax.device_count()}")
+
+    state = init_train_state(cfg, opt_cfg, jax.random.key(args.seed))
+    data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch, args.seed)
+
+    tce = TCEngine(TCEConfig(n_nodes=args.ckpt_nodes),
+                   DiskStore(args.ckpt_dir))
+    start = 0
+    if args.resume:
+        try:
+            ck_step, flat = tce.restore()
+            state = unflatten_like(state, flat)
+            start = int(ck_step)
+            data.restore(type(data.state)(start))
+            print(f"resumed from step {start}")
+        except FileNotFoundError:
+            print("no checkpoint found; starting fresh")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, TrainConfig()),
+                      donate_argnums=(0,))
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch_at(step).items()}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.numpy.zeros(
+                (args.batch, cfg.encdec.enc_len, cfg.d_model), "float32")
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.numpy.zeros(
+                (args.batch, min(cfg.vlm.n_vision_tokens, args.seq), cfg.d_model),
+                "float32")
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % args.log_every == 0 or step == start:
+            print(f"step {step+1:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(step-start+1):.2f}s/step)")
+        if (step + 1) % args.ckpt_every == 0:
+            h = tce.save(step + 1, state)
+            print(f"  tce.save(step={step+1}) cache={h.cache_wall_s*1e3:.0f}ms "
+                  f"(async persist in background)")
+    tce.reconciler.quiesce(60)
+    tce.close()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

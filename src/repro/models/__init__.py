@@ -1,0 +1,12 @@
+from .config import (EncDecConfig, HybridConfig, MLAConfig, MoEConfig,
+                     ModelConfig, SSMConfig, VLMConfig)
+from .model import (cross_entropy, decode_step, forward, init_params, loss_fn,
+                    param_axes, param_shapes)
+from .blocks import cache_struct, segments
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig",
+    "EncDecConfig", "VLMConfig", "init_params", "param_axes", "param_shapes",
+    "forward", "decode_step", "loss_fn", "cross_entropy", "cache_struct",
+    "segments",
+]

@@ -1,0 +1,210 @@
+"""GQA attention with a memory-bounded chunked (online) XLA path and an
+optional Pallas flash-attention path.
+
+The chunked path processes query blocks against the full K/V with an exact
+per-row softmax, bounding the live score buffer at ``q_block × T`` — this is
+what lets 32k-token prefill lower within v5e HBM without a custom kernel, and
+it is also the shape the Pallas kernel tiles.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope
+from .params import ParamBuilder
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def attn_params(pb: ParamBuilder, cfg: ModelConfig, name: str = "attn",
+                cross: bool = False):
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    with pb.scope(name):
+        p = {
+            "wq": pb.param("wq", (d, h * dh), ("embed", "heads")),
+            "wk": pb.param("wk", (d, kh * dh), ("embed", "kv_heads")),
+            "wv": pb.param("wv", (d, kh * dh), ("embed", "kv_heads")),
+            "wo": pb.param("wo", (h * dh, d), ("heads", "embed")),
+        }
+        if cfg.use_bias:
+            p["bq"] = pb.param("bq", (h * dh,), ("heads",), init="zeros")
+            p["bk"] = pb.param("bk", (kh * dh,), ("kv_heads",), init="zeros")
+            p["bv"] = pb.param("bv", (kh * dh,), ("kv_heads",), init="zeros")
+            p["bo"] = pb.param("bo", (d,), ("embed",), init="zeros")
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Core attention math
+# --------------------------------------------------------------------------- #
+def _pick_q_block(seq: int) -> int:
+    for blk in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if seq % blk == 0 and blk <= seq:
+            return blk
+    return 1
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool, q_block: Optional[int] = None,
+                      kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Exact attention, scanned over query blocks.
+
+    q: (B, S, H, D);  k, v: (B, T, KH, D) with H = KH * rep.
+    kv_len: optional per-batch valid KV length (decode with a cache).
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.array(d, jnp.float32))
+    q_block = q_block or _pick_q_block(s)
+    n_blocks = s // q_block
+
+    qb = q.reshape(b, n_blocks, q_block, kh, rep, d)
+    t_idx = jnp.arange(t)
+
+    def one_block(carry, q_i):
+        # `start` comes from the loop carry (not a constant xs array) so XLA
+        # cannot hoist + materialise the causal masks of all blocks at once.
+        start = carry * q_block
+        scores = jnp.einsum("bqkrd,btkd->bkrqt", q_i, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = None
+        if causal:
+            q_idx = start + jnp.arange(q_block)
+            mask = q_idx[:, None] >= t_idx[None, :]
+        if kv_len is not None:
+            len_mask = t_idx[None, :] < kv_len[:, None]          # (b, t)
+            len_mask = len_mask[:, None, None, None, :]
+            scores = jnp.where(len_mask, scores, NEG_INF)
+        if mask is not None:
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bkrqt,btkd->bqkrd", w.astype(v.dtype), v)
+        return carry + 1, o
+
+    _, out = jax.lax.scan(one_block, jnp.zeros((), jnp.int32),
+                          jnp.moveaxis(qb, 1, 0))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, v.shape[-1])
+    return out
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """Single-step decode. q: (B, 1, H, D); k, v: (B, T, KH, D); pos: (B,)."""
+    b, _, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.array(d, jnp.float32))
+    qh = q.reshape(b, kh, rep, d)
+    scores = jnp.einsum("bkrd,btkd->bkrt", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(t)[None, :] <= pos[:, None]                # (b, t)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkrt,btkd->bkrd", w.astype(v.dtype), v)
+    return o.reshape(b, 1, h, d)
+
+
+# --------------------------------------------------------------------------- #
+# Full module forward
+# --------------------------------------------------------------------------- #
+def _project_qkv(p, x: jax.Array, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = x.astype(dt)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt))
+    if cfg.use_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    return (q.reshape(b, s, h, dh), k.reshape(b, s, kh, dh), v.reshape(b, s, kh, dh))
+
+
+def _out_proj(p, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s = o.shape[:2]
+    y = jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1).astype(dt), p["wo"].astype(dt))
+    if cfg.use_bias:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+def attention_forward(p, x: jax.Array, cfg: ModelConfig,
+                      positions: jax.Array,
+                      causal: bool = True,
+                      mrope_sections=None,
+                      use_rope: bool = True,
+                      attn_impl: str = "xla") -> Tuple[jax.Array, dict]:
+    """Training / prefill forward. Returns (y, kv) — kv feeds the cache."""
+    q, k, v = _project_qkv(p, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary_factor, mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor, mrope_sections)
+    if attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(q, k, v, causal=causal)
+    else:
+        o = chunked_attention(q, k, v, causal=causal)
+    return _out_proj(p, o, cfg), {"k": k, "v": v}
+
+
+def attention_decode(p, x: jax.Array, cfg: ModelConfig,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array, mrope_sections=None,
+                     use_rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step. cache_k/v: (B, T, KH, D); pos: (B,) write index.
+
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)                            # s == 1
+    if use_rope:
+        pos2d = pos[:, None]                                     # (b, 1)
+        if mrope_sections is not None:
+            pos_m = jnp.broadcast_to(pos2d[None], (3, b, 1))
+            q = apply_rope(q, pos_m, cfg.rope_theta, cfg.partial_rotary_factor, mrope_sections)
+            k = apply_rope(k, pos_m, cfg.rope_theta, cfg.partial_rotary_factor, mrope_sections)
+        else:
+            q = apply_rope(q, pos2d, cfg.rope_theta, cfg.partial_rotary_factor)
+            k = apply_rope(k, pos2d, cfg.rope_theta, cfg.partial_rotary_factor)
+    # scatter the new token into the cache at `pos` (per-batch index)
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0])
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0])
+    o = decode_attention(q, cache_k, cache_v, pos)
+    return _out_proj(p, o, cfg), cache_k, cache_v
+
+
+def cross_attention_forward(p, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                            cfg: ModelConfig) -> jax.Array:
+    """Cross-attention against precomputed encoder K/V (no RoPE, not causal)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = jnp.einsum("bsd,de->bse", x.astype(dt), p["wq"].astype(dt))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(b, s, h, dh)
+    k, v = enc_kv
+    o = chunked_attention(q, k, v, causal=False)
+    return _out_proj(p, o, cfg)
+
+
+def project_enc_kv(p, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, t, _ = enc_out.shape
+    kh, dh = cfg.n_kv_heads, cfg.d_head
+    k = jnp.einsum("btd,de->bte", enc_out.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("btd,de->bte", enc_out.astype(dt), p["wv"].astype(dt))
+    if cfg.use_bias:
+        k, v = k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    return k.reshape(b, t, kh, dh), v.reshape(b, t, kh, dh)

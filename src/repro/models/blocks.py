@@ -1,0 +1,288 @@
+"""Decoder/encoder block assembly with scan-over-layers stacks.
+
+An architecture is decomposed into *segments*: maximal runs of layers whose
+(mixer, mlp) pattern repeats with a fixed period. Each segment is one
+``lax.scan`` over stacked parameters — this keeps the HLO size O(period), not
+O(n_layers), which is what makes 61-layer 671B configs compile quickly.
+
+  llama3 / olmo / yi / phi4 / qwen2-vl : 1 segment, period [( attn, dense)]
+  olmoe                                : 1 segment, period [( attn, moe )]
+  deepseek-v3                          : prefix 3x(mla, dense) + 58x(mla, moe)
+  jamba                                : 4x period-8 [7x(ssm, ·) + 1x(attn, ·)], moe on odd
+  mamba2                               : 1 segment, period [( ssm, none )]
+  whisper                              : encoder segment + decoder segment (+cross)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import apply_norm, mlp_params, norm_params, apply_mlp
+from .params import ParamBuilder, stacked
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str          # attn | mla | ssm
+    mlp: str           # dense | moe | none
+    cross: bool = False
+
+
+@dataclass(frozen=True)
+class Segment:
+    name: str
+    n_steps: int
+    specs: Tuple[LayerSpec, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_steps * len(self.specs)
+
+
+def layer_spec(cfg: ModelConfig, i: int, cross: bool = False) -> LayerSpec:
+    kind = cfg.layer_kind(i)
+    if kind == "attn" and cfg.mla is not None:
+        kind = "mla"
+    mlp = cfg.mlp_kind(i)
+    if cfg.family == "ssm":
+        mlp = "none"
+    return LayerSpec(kind, mlp, cross)
+
+
+def segments(cfg: ModelConfig, cross: bool = False) -> List[Segment]:
+    specs = [layer_spec(cfg, i, cross) for i in range(cfg.n_layers)]
+    segs: List[Segment] = []
+    start = 0
+    if cfg.moe is not None and cfg.moe.first_k_dense > 0:
+        k = cfg.moe.first_k_dense
+        assert all(s == specs[0] for s in specs[:k])
+        segs.append(Segment("prefix", k, (specs[0],)))
+        start = k
+    rest = specs[start:]
+    if rest:
+        for p in range(1, len(rest) + 1):
+            if len(rest) % p == 0 and all(rest[i] == rest[i % p] for i in range(len(rest))):
+                segs.append(Segment("stack", len(rest) // p, tuple(rest[:p])))
+                break
+    return segs
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def layer_params(pb: ParamBuilder, cfg: ModelConfig, spec: LayerSpec, name: str):
+    with pb.scope(name):
+        p: Dict[str, Any] = {"norm1": norm_params(pb, cfg, "norm1")}
+        if spec.kind == "attn":
+            p["mix"] = attn_mod.attn_params(pb, cfg, "attn")
+        elif spec.kind == "mla":
+            p["mix"] = mla_mod.mla_params(pb, cfg, "attn")
+        else:
+            p["mix"] = ssm_mod.ssm_params(pb, cfg, "ssm")
+        if spec.cross:
+            p["norm_c"] = norm_params(pb, cfg, "norm_c")
+            p["cross"] = attn_mod.attn_params(pb, cfg, "cross")
+        if spec.mlp != "none":
+            p["norm2"] = norm_params(pb, cfg, "norm2")
+            if spec.mlp == "moe":
+                p["mlp"] = moe_mod.moe_params(pb, cfg, "moe")
+            else:
+                p["mlp"] = mlp_params(pb, cfg, name="mlp")
+        return p
+
+
+def segment_params(pb: ParamBuilder, cfg: ModelConfig, seg: Segment):
+    def one(pb_):
+        return {f"l{j}": layer_params(pb_, cfg, spec, f"l{j}")
+                for j, spec in enumerate(seg.specs)}
+
+    with pb.scope(seg.name):
+        return stacked(pb, seg.n_steps, one)
+
+
+# --------------------------------------------------------------------------- #
+# Cache
+# --------------------------------------------------------------------------- #
+def layer_cache_spec(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
+                     enc_len: Optional[int]):
+    """Returns dict of (shape, dtype, logical_axes) per cache leaf."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    out: Dict[str, Tuple[tuple, Any, tuple]] = {}
+    if spec.kind == "attn":
+        kv = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        ax = ("batch", "cache_seq", "act_kv_heads", None)
+        out["k"] = (kv, dt, ax)
+        out["v"] = (kv, dt, ax)
+    elif spec.kind == "mla":
+        m = cfg.mla
+        out["ckv"] = ((batch, max_len, m.kv_lora_rank), dt, ("batch", "cache_seq", None))
+        out["kpe"] = ((batch, max_len, m.qk_rope_dim), dt, ("batch", "cache_seq", None))
+    else:
+        d_in, n_heads, conv_dim = ssm_mod.ssm_dims(cfg)
+        s = cfg.ssm
+        out["conv"] = ((batch, s.d_conv - 1, conv_dim), dt, ("batch", None, "act_mlp"))
+        out["state"] = ((batch, n_heads, s.head_dim, s.d_state), jnp.float32,
+                        ("batch", "state_heads", None, None))
+    if spec.cross:
+        assert enc_len is not None
+        kv = (batch, enc_len, cfg.n_kv_heads, cfg.d_head)
+        ax = ("batch", None, "act_kv_heads", None)
+        out["ek"] = (kv, dt, ax)
+        out["ev"] = (kv, dt, ax)
+    return out
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 enc_len: Optional[int] = None, mode: str = "shape"):
+    """Cache pytree ('shape' -> ShapeDtypeStruct, 'zeros' -> arrays,
+    'axes' -> logical-axis tuples). Leading dim of every leaf = seg.n_steps."""
+    tree: Dict[str, Any] = {}
+    for seg in segments(cfg, cross=(cfg.family == "encdec")):
+        seg_tree: Dict[str, Any] = {}
+        for j, spec in enumerate(seg.specs):
+            leaves = {}
+            for k, (shape, dt, ax) in layer_cache_spec(cfg, spec, batch, max_len, enc_len).items():
+                full = (seg.n_steps,) + shape
+                if mode == "shape":
+                    leaves[k] = jax.ShapeDtypeStruct(full, dt)
+                elif mode == "zeros":
+                    leaves[k] = jnp.zeros(full, dt)
+                else:
+                    leaves[k] = (None,) + ax
+            seg_tree[f"l{j}"] = leaves
+        tree[seg.name] = seg_tree
+    return tree
+
+
+# --------------------------------------------------------------------------- #
+# Layer forward
+# --------------------------------------------------------------------------- #
+def layer_forward(p, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+                  *, mode: str, positions=None, pos=None, cache=None,
+                  enc_out=None, mrope_sections=None, attn_impl: str = "xla"):
+    """Returns (x, new_cache_leaves, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, jax.Array] = {}
+    h = apply_norm(p["norm1"], x, cfg)
+
+    if spec.kind == "attn":
+        use_rope = cfg.pos_embedding == "rope"
+        if mode == "decode":
+            y, nk, nv = attn_mod.attention_decode(
+                p["mix"], h, cfg, cache["k"], cache["v"], pos,
+                mrope_sections=mrope_sections, use_rope=use_rope)
+            new_cache.update(k=nk, v=nv)
+        else:
+            y, kv = attn_mod.attention_forward(
+                p["mix"], h, cfg, positions, causal=True,
+                mrope_sections=mrope_sections, use_rope=use_rope,
+                attn_impl=attn_impl)
+            if mode == "prefill":
+                new_cache.update(kv)
+    elif spec.kind == "mla":
+        if mode == "decode":
+            y, nckv, nkpe = mla_mod.mla_decode(
+                p["mix"], h, cfg, cache["ckv"], cache["kpe"], pos)
+            new_cache.update(ckv=nckv, kpe=nkpe)
+        else:
+            y, latent = mla_mod.mla_forward(p["mix"], h, cfg, positions)
+            if mode == "prefill":
+                new_cache.update(latent)
+    else:  # ssm
+        if mode == "decode":
+            y, nconv, nstate = ssm_mod.ssm_decode(
+                p["mix"], h, cfg, cache["conv"], cache["state"])
+            new_cache.update(conv=nconv, state=nstate)
+        else:
+            y, st = ssm_mod.ssm_forward(p["mix"], h, cfg)
+            if mode == "prefill":
+                new_cache.update(st)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    if spec.cross:
+        hc = apply_norm(p["norm_c"], x, cfg)
+        if mode == "decode":
+            ekv = (cache["ek"], cache["ev"])
+            new_cache.update(ek=cache["ek"], ev=cache["ev"])  # pass through
+        else:
+            ekv = attn_mod.project_enc_kv(p["cross"], enc_out, cfg)
+            if mode == "prefill":
+                new_cache.update(ek=ekv[0], ev=ekv[1])
+        x = x + attn_mod.cross_attention_forward(p["cross"], hc, ekv, cfg)
+
+    if spec.mlp != "none":
+        h2 = apply_norm(p["norm2"], x, cfg)
+        if spec.mlp == "moe":
+            y2, a = moe_mod.moe_forward(p["mlp"], h2, cfg)
+            aux = aux + a
+        else:
+            y2 = apply_mlp(p["mlp"], h2, cfg)
+        x = x + y2
+        x = constrain(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------- #
+# Segment forward (scan or unrolled)
+# --------------------------------------------------------------------------- #
+def segment_forward(params, x: jax.Array, cfg: ModelConfig, seg: Segment,
+                    *, mode: str, cache=None, **kw):
+    """Run one segment. Returns (x, new_cache_or_None, aux)."""
+
+    def body(carry, xs):
+        x_, aux_ = carry
+        p_step, cache_step = xs
+        new_caches = {}
+        for j, spec in enumerate(seg.specs):
+            c = cache_step[f"l{j}"] if cache_step is not None else None
+            x_, nc, a = layer_forward(p_step[f"l{j}"], x_, cfg, spec,
+                                      mode=mode, cache=c, **kw)
+            new_caches[f"l{j}"] = nc
+            aux_ = aux_ + a
+        return (x_, aux_), new_caches
+
+    aux0 = jnp.zeros((), jnp.float32)
+    want_cache = mode in ("prefill", "decode")
+
+    if cfg.scan_layers:
+        if cfg.remat and cfg.remat_policy != "none" and mode == "train":
+            policy = (jax.checkpoint_policies.checkpoint_dots
+                      if cfg.remat_policy == "dots" else None)
+            body_fn = jax.checkpoint(body, policy=policy)
+        else:
+            body_fn = body
+        xs = (params, cache)
+
+        def scan_body(carry, xs_):
+            p_step = xs_[0]
+            c_step = xs_[1] if cache is not None else None
+            return body_fn(carry, (p_step, c_step))
+
+        scan_xs = (params, cache) if cache is not None else (params,)
+        (x, aux), ys = jax.lax.scan(scan_body, (x, aux0), scan_xs)
+        new_cache = ys if want_cache else None
+        return x, new_cache, aux
+
+    # unrolled (reduced smoke configs)
+    aux = aux0
+    ys_list = []
+    for i in range(seg.n_steps):
+        p_i = jax.tree.map(lambda t: t[i], params)
+        c_i = jax.tree.map(lambda t: t[i], cache) if cache is not None else None
+        (x, aux), nc = body((x, aux), (p_i, c_i))
+        ys_list.append(nc)
+    new_cache = None
+    if want_cache:
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ys_list)
+    return x, new_cache, aux

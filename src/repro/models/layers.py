@@ -1,0 +1,150 @@
+"""Shared layers: norms, RoPE (incl. M-RoPE / partial), MLPs, embeddings.
+
+All functions are pure; parameters come from :class:`~repro.models.params.ParamBuilder`.
+Logical axis names used here (mapped to mesh axes in ``repro.parallel.sharding``):
+
+  ``embed``    d_model dim of weights          (FSDP-sharded over data)
+  ``heads``    q-heads*d_head fused dim        (TP over model)
+  ``kv_heads`` kv-heads*d_head fused dim       (TP over model when divisible)
+  ``mlp``      FFN hidden dim                  (TP over model)
+  ``vocab``    vocabulary dim                  (TP over model)
+  ``experts``  MoE expert dim                  (EP over model)
+  ``layers``   stacked-scan leading dim        (never sharded)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamBuilder
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def norm_params(pb: ParamBuilder, cfg: ModelConfig, name: str):
+    if cfg.norm == "nonparam_ln":
+        return {}
+    with pb.scope(name):
+        p = {"scale": pb.param("scale", (cfg.d_model,), ("embed",), init="ones")}
+        if cfg.norm == "layernorm":
+            p["bias"] = pb.param("bias", (cfg.d_model,), ("embed",), init="zeros")
+    return p
+
+
+def apply_norm(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + cfg.norm_eps)
+        x = x * p["scale"].astype(jnp.float32)
+    else:  # layernorm / nonparam_ln
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        if cfg.norm == "layernorm":
+            x = x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               partial_factor: float = 1.0,
+               mrope_sections: Optional[Tuple[int, int, int]] = None) -> jax.Array:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) — 'split-half' convention.
+
+    x:         (..., seq, n_heads, d_head)
+    positions: (batch, seq) int32, or (3, batch, seq) for M-RoPE.
+    """
+    d_head = x.shape[-1]
+    rot = int(d_head * partial_factor)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv = rope_frequencies(rot, theta)                          # (rot/2,)
+
+    if mrope_sections is not None:
+        # M-RoPE: frequency bands are assigned to (t, h, w) position streams.
+        t_sec, h_sec, w_sec = mrope_sections
+        assert t_sec + h_sec + w_sec == rot // 2
+        sec_ids = jnp.concatenate([
+            jnp.zeros((t_sec,), jnp.int32),
+            jnp.ones((h_sec,), jnp.int32),
+            jnp.full((w_sec,), 2, jnp.int32)])                   # (rot/2,)
+        # positions: (3, batch, seq) -> per-band position (batch, seq, rot/2)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32).transpose(1, 2, 0),    # (b, s, 3)
+            sec_ids[None, None, :], axis=-1)                     # (b, s, rot/2)
+        angles = pos * inv[None, None, :]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (b, s, rot/2)
+
+    cos = jnp.cos(angles)[..., None, :]                          # (b, s, 1, rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# Dense MLP
+# --------------------------------------------------------------------------- #
+def mlp_params(pb: ParamBuilder, cfg: ModelConfig, d_ff: Optional[int] = None,
+               name: str = "mlp"):
+    d_ff = d_ff or cfg.d_ff
+    with pb.scope(name):
+        if cfg.activation == "swiglu":
+            return {
+                "wi": pb.param("wi", (cfg.d_model, d_ff), ("embed", "mlp")),
+                "wg": pb.param("wg", (cfg.d_model, d_ff), ("embed", "mlp")),
+                "wo": pb.param("wo", (d_ff, cfg.d_model), ("mlp", "embed")),
+            }
+        return {
+            "wi": pb.param("wi", (cfg.d_model, d_ff), ("embed", "mlp")),
+            "wo": pb.param("wo", (d_ff, cfg.d_model), ("mlp", "embed")),
+        }
+
+
+def apply_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(dt)
+    if "wg" in p:
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head
+# --------------------------------------------------------------------------- #
+def embedding_params(pb: ParamBuilder, cfg: ModelConfig):
+    with pb.scope("embed"):
+        p = {"table": pb.param("table", (cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        with pb.scope("head"):
+            p["head"] = pb.param("w", (cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["table"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+
+
+def lm_logits(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    w = p["table"].T if cfg.tie_embeddings else p["head"]
+    return jnp.einsum("...d,dv->...v", x.astype(dt), w.astype(dt))

@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Training/prefill uses the reconstructing form (decompress K/V per token).
+Decode uses the *absorbed* form: W_uk is folded into the query and W_uv into
+the output so the KV cache stores only the ``kv_lora_rank + qk_rope_dim``
+latent per token — the paper-faithful MLA memory win.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention, NEG_INF
+from .config import ModelConfig
+from .layers import apply_rope
+from .params import ParamBuilder
+
+
+def _rms(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x.astype(dt)
+
+
+def mla_params(pb: ParamBuilder, cfg: ModelConfig, name: str = "attn"):
+    m = cfg.mla
+    d, nh = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    with pb.scope(name):
+        return {
+            "w_dq": pb.param("w_dq", (d, m.q_lora_rank), ("embed", "lora")),
+            "q_scale": pb.param("q_scale", (m.q_lora_rank,), ("lora",), init="ones"),
+            "w_uq": pb.param("w_uq", (m.q_lora_rank, nh * qk), ("lora", "heads")),
+            "w_dkv": pb.param("w_dkv", (d, m.kv_lora_rank), ("embed", "lora")),
+            "kv_scale": pb.param("kv_scale", (m.kv_lora_rank,), ("lora",), init="ones"),
+            "w_kr": pb.param("w_kr", (d, m.qk_rope_dim), ("embed", "lora")),
+            "w_uk": pb.param("w_uk", (m.kv_lora_rank, nh * m.qk_nope_dim), ("lora", "heads")),
+            "w_uv": pb.param("w_uv", (m.kv_lora_rank, nh * m.v_head_dim), ("lora", "heads")),
+            "w_o": pb.param("w_o", (nh * m.v_head_dim, d), ("heads", "embed")),
+        }
+
+
+def _latents(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Compute (q_nope, q_pe, ckv, k_pe) — ckv/k_pe are what decode caches."""
+    m = cfg.mla
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    x = x.astype(dt)
+
+    cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(dt))) * p["q_scale"].astype(dt)
+    q = jnp.einsum("bsr,re->bse", cq, p["w_uq"].astype(dt))
+    q = q.reshape(b, s, nh, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_pe = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))) * p["kv_scale"].astype(dt)
+    k_pe = jnp.einsum("bsd,dr->bsr", x, p["w_kr"].astype(dt))
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_pe, ckv, k_pe
+
+
+def mla_forward(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+                ) -> Tuple[jax.Array, dict]:
+    """Training / prefill (reconstructing form). Returns (y, latent-cache)."""
+    m = cfg.mla
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    q_nope, q_pe, ckv, k_pe = _latents(p, x, cfg, positions)
+
+    k_nope = jnp.einsum("bsr,re->bse", ckv, p["w_uk"].astype(dt)).reshape(b, s, nh, m.qk_nope_dim)
+    v = jnp.einsum("bsr,re->bse", ckv, p["w_uv"].astype(dt)).reshape(b, s, nh, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], q_pe.shape)], axis=-1)
+
+    o = chunked_attention(q, k, v, causal=True)
+    y = jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1), p["w_o"].astype(dt))
+    return y, {"ckv": ckv, "kpe": k_pe}
+
+
+def mla_decode(p, x: jax.Array, cfg: ModelConfig,
+               cache_ckv: jax.Array, cache_kpe: jax.Array,
+               pos: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed one-step decode.
+
+    cache_ckv: (B, T, kv_lora_rank); cache_kpe: (B, T, qk_rope_dim); pos: (B,).
+    """
+    m = cfg.mla
+    dt = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+    nh = cfg.n_heads
+    q_nope, q_pe, ckv, k_pe = _latents(p, x, cfg, pos[:, None])
+
+    bidx = jnp.arange(b)
+    cache_ckv = cache_ckv.at[bidx, pos].set(ckv[:, 0])
+    cache_kpe = cache_kpe.at[bidx, pos].set(k_pe[:, 0])
+
+    # absorb W_uk into q:  (b, nh, dn) x (kvr, nh, dn) -> (b, nh, kvr)
+    w_uk = p["w_uk"].astype(dt).reshape(m.kv_lora_rank, nh, m.qk_nope_dim)
+    q_abs = jnp.einsum("bnd,rnd->bnr", q_nope[:, 0], w_uk)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(m.qk_nope_dim + m.qk_rope_dim, jnp.float32))
+    scores = (jnp.einsum("bnr,btr->bnt", q_abs, cache_ckv, preferred_element_type=jnp.float32)
+              + jnp.einsum("bnr,btr->bnt", q_pe[:, 0], cache_kpe,
+                           preferred_element_type=jnp.float32)) * scale
+    t = cache_ckv.shape[1]
+    mask = jnp.arange(t)[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+
+    ctx = jnp.einsum("bnt,btr->bnr", w, cache_ckv)               # (b, nh, kvr)
+    w_uv = p["w_uv"].astype(dt).reshape(m.kv_lora_rank, nh, m.v_head_dim)
+    o = jnp.einsum("bnr,rnv->bnv", ctx, w_uv)                    # (b, nh, dv)
+    y = jnp.einsum("be,ed->bd", o.reshape(b, -1), p["w_o"].astype(dt))
+    return y[:, None, :], cache_ckv, cache_kpe

@@ -1,0 +1,97 @@
+"""Explicit-collective MoE (shard_map) — the hillclimbed expert-parallel path.
+
+XLA SPMD cannot partition the capacity-scatter dispatch: it falls back to
+"involuntary full rematerialization" (replicate + partial-sum all-reduce),
+which measured 9.3 TB/chip/step of all-reduce wire on deepseek-v3 train_4k.
+This path takes manual control of the collective schedule instead:
+
+  per device (b_loc, s_loc, d) tokens        [batch over (pod,data), seq over model]
+    local top-k gate + capacity scatter  ->  (E, C_loc, d)
+    all_to_all over 'model'              ->  (E_loc, ep*C_loc, d)    [EP dispatch]
+    expert FFN: wi/wg column-parallel over 'data' (f-sharded), wo row-parallel
+      -> one psum over 'data'            ->  (E_loc, ep*C_loc, d)
+    all_to_all back                      ->  (E, C_loc, d)
+    local combine                        ->  (b_loc, s_loc, d)
+
+Wire per layer per chip ~ 2 x tokens_loc*k*cf*d (dispatch+return a2a)
++ tokens_loc*k*cf*d (psum) — vs the scatter path's full-tensor all-reduces.
+Token drops are per-(device, expert) capacity, the standard EP semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import active
+
+from .config import ModelConfig
+from .moe import _aux_loss, _combine_one_group, _dispatch_one_group, _gate
+
+
+def _local_moe(router, wi, wg, wo, x, *, cfg: ModelConfig, ep: int,
+               dp_axes: Tuple[str, ...]):
+    """Per-device body. x: (b_loc, s_loc, d); wi/wg: (E_loc, d, f_loc);
+    wo: (E_loc, f_loc, d). Returns (y, aux)."""
+    mo = cfg.moe
+    dt = jnp.dtype(cfg.compute_dtype)
+    b_loc, s_loc, d = x.shape
+    g = b_loc * s_loc
+    xl = x.reshape(g, d).astype(dt)
+
+    probs, gate_w, expert_idx = _gate({"router": router}, xl, cfg)
+    aux = _aux_loss(probs, expert_idx, mo.n_experts)
+    aux = jax.lax.pmean(jax.lax.pmean(aux, "model"), dp_axes)
+
+    capacity = max(1, int(g * mo.top_k / mo.n_experts * mo.capacity_factor))
+    disp, idx = _dispatch_one_group(xl, gate_w, expert_idx,
+                                    mo.n_experts, capacity)      # (E, C, d)
+
+    # EP dispatch: experts go home to their shard
+    disp = jax.lax.all_to_all(disp, "model", split_axis=0, concat_axis=1,
+                              tiled=True)                        # (E_loc, ep*C, d)
+
+    # ZeRO-3 weight gathering: expert FFN weights are *stored* f-sharded over
+    # 'data'; gather them for the local matmuls (each data device holds
+    # different tokens, so partial-f compute + psum would be wrong — the
+    # transpose of this gather reduce-scatters the expert grads, i.e. proper
+    # ZeRO semantics).
+    if "data" in dp_axes or dp_axes == ("pod", "data"):
+        wi = jax.lax.all_gather(wi, "data", axis=2, tiled=True)
+        wg = jax.lax.all_gather(wg, "data", axis=2, tiled=True)
+        wo = jax.lax.all_gather(wo, "data", axis=1, tiled=True)
+    h = jnp.einsum("ecd,edf->ecf", disp, wi.astype(dt))
+    gte = jnp.einsum("ecd,edf->ecf", disp, wg.astype(dt))
+    h = jax.nn.silu(gte) * h
+    out = jnp.einsum("ecf,efd->ecd", h, wo.astype(dt))
+
+    out = jax.lax.all_to_all(out, "model", split_axis=1, concat_axis=0,
+                             tiled=True)                         # (E, C, d)
+    y = _combine_one_group(out, idx, gate_w, g)
+    return y.reshape(b_loc, s_loc, d), aux
+
+
+def moe_forward_shard_map(p, x: jax.Array, cfg: ModelConfig
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) -> (y, aux). Requires an active sharding context whose
+    mesh has a 'model' axis; falls back to the caller otherwise."""
+    ctx = active()
+    mesh = ctx.mesh
+    axis_names = set(mesh.axis_names)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+
+    x_spec = P(dp_axes if dp_axes else None, "model", None)
+    w_spec = P("model", None, "data" if "data" in axis_names else None)
+    wo_spec = P("model", "data" if "data" in axis_names else None, None)
+
+    fn = jax.shard_map(
+        functools.partial(_local_moe, cfg=cfg,
+                          ep=mesh.shape["model"], dp_axes=dp_axes),
+        mesh=mesh,
+        in_specs=(P(), w_spec, w_spec, wo_spec, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    return fn(p["router"], p["wi"], p["wg"], p["wo"], x)

@@ -1,0 +1,107 @@
+"""Single-source-of-truth parameter construction.
+
+Model ``init`` functions are written once against a :class:`ParamBuilder`; the
+builder is then run in one of three modes:
+
+* ``init``  — materialise ``jnp`` arrays (deterministic per-path RNG folding);
+* ``axes``  — return the identically-structured tree of *logical axis* tuples
+  used by ``repro.parallel.sharding`` to derive ``PartitionSpec``s;
+* ``shape`` — return ``jax.ShapeDtypeStruct`` stand-ins (dry-run, no allocation).
+
+Because all three trees come from the same traversal they can never drift.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+def _path_key(root: jax.Array, path: str) -> jax.Array:
+    # Stable per-path fold-in (path hash is deterministic across runs).
+    h = np.uint32(int.from_bytes(path.encode(), "little", signed=False) % (2**31 - 1))
+    return jax.random.fold_in(root, h)
+
+
+class ParamBuilder:
+    """Builds a nested-dict parameter tree in one of three modes."""
+
+    def __init__(self, mode: str, key: Optional[jax.Array] = None,
+                 param_dtype: jnp.dtype = jnp.float32):
+        assert mode in ("init", "axes", "shape")
+        self.mode = mode
+        self.key = key
+        self.param_dtype = param_dtype
+        self._scope: list[str] = []
+
+    # -- scoping -------------------------------------------------------- #
+    def scope(self, name: str) -> "_Scope":
+        return _Scope(self, name)
+
+    def _path(self, name: str) -> str:
+        return "/".join(self._scope + [name])
+
+    # -- leaf ----------------------------------------------------------- #
+    def param(self, name: str, shape: Sequence[int], axes: Axes,
+              init: str = "normal", scale: float = 1.0,
+              dtype: Optional[jnp.dtype] = None):
+        shape = tuple(int(s) for s in shape)
+        assert len(axes) == len(shape), f"{self._path(name)}: axes {axes} vs shape {shape}"
+        dtype = dtype or self.param_dtype
+        if self.mode == "axes":
+            return axes
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        key = _path_key(self.key, self._path(name))
+        if init == "normal":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = scale / np.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "embed":
+            return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+
+class _Scope:
+    def __init__(self, pb: ParamBuilder, name: str):
+        self.pb, self.name = pb, name
+
+    def __enter__(self):
+        self.pb._scope.append(self.name)
+        return self.pb
+
+    def __exit__(self, *exc):
+        self.pb._scope.pop()
+        return False
+
+
+def stacked(pb: ParamBuilder, n: int, fn: Callable[[ParamBuilder], dict]) -> dict:
+    """Build `n` stacked copies of a sub-tree (leading 'layers' axis) for scan.
+
+    In 'init' mode each layer gets its own fold-in; leaves gain a leading dim.
+    """
+    if pb.mode in ("axes", "shape"):
+        one = fn(pb)
+
+        def _lift(leaf):
+            if pb.mode == "axes":
+                return ("layers",) + tuple(leaf)
+            return jax.ShapeDtypeStruct((n,) + tuple(leaf.shape), leaf.dtype)
+
+        return jax.tree.map(_lift, one, is_leaf=lambda x: isinstance(x, (tuple, jax.ShapeDtypeStruct)))
+
+    layers = []
+    base_scope = list(pb._scope)
+    for i in range(n):
+        pb._scope = base_scope + [f"layer{i}"]
+        layers.append(fn(pb))
+    pb._scope = base_scope
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)

@@ -1,0 +1,228 @@
+"""Mamba-2 (state-space duality) block.
+
+Training/prefill runs the chunked SSD algorithm: intra-chunk terms are dense
+(c x c) matmuls that map onto the MXU; inter-chunk state is carried by a
+``lax.scan`` — O(S) time, O(c^2) live memory. Decode is the O(1) recurrent
+step. The Pallas kernel in ``repro.kernels.ssd_scan`` tiles the same chunk
+structure; this module is its oracle via ``kernels/ssd_scan/ref.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamBuilder
+
+
+# --------------------------------------------------------------------------- #
+# Params
+# --------------------------------------------------------------------------- #
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def ssm_params(pb: ParamBuilder, cfg: ModelConfig, name: str = "ssm"):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, conv_dim = ssm_dims(cfg)
+    with pb.scope(name):
+        return {
+            # order: [z (d_in), xBC (conv_dim), dt (n_heads)]
+            "w_in": pb.param("w_in", (d, 2 * d_in + 2 * s.n_groups * s.d_state + n_heads),
+                             ("embed", "heads")),
+            "conv_w": pb.param("conv_w", (s.d_conv, conv_dim), (None, "heads")),
+            "conv_b": pb.param("conv_b", (conv_dim,), ("heads",), init="zeros"),
+            "A_log": pb.param("A_log", (n_heads,), (None,), init="zeros"),
+            "D": pb.param("D", (n_heads,), (None,), init="ones"),
+            "dt_bias": pb.param("dt_bias", (n_heads,), (None,), init="zeros"),
+            "w_out": pb.param("w_out", (d_in, d), ("heads", "embed")),
+        }
+
+
+# --------------------------------------------------------------------------- #
+# SSD chunked scan (oracle for the Pallas kernel)
+# --------------------------------------------------------------------------- #
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., c) -> (..., c, c); out[i, j] = sum_{k=j+1..i} x_k, -inf above diag."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Shapes:
+      x: (b, s, h, p)  dt: (b, s, h)  A: (h,)  B, C: (b, s, g, n); h = g*rep
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert s % chunk == 0, (s, chunk)
+    l = s // chunk
+
+    f32 = jnp.float32
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, l, chunk, h)          # (b,l,c,h)
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, l, chunk, g, rep, p)
+    Bc = B.astype(f32).reshape(b, l, chunk, g, n)
+    Cc = C.astype(f32).reshape(b, l, chunk, g, n)
+
+    cum = jnp.cumsum(dA, axis=2)                                           # (b,l,c,h)
+    # intra-chunk: L[i,j] = exp(segsum)  per head
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))                          # (b,l,h,c,c)
+    L = L.reshape(b, l, g, rep, chunk, chunk)
+    CB = jnp.einsum("blign,bljgn->blgij", Cc, Bc)                          # (b,l,g,c,c)
+    M = CB[:, :, :, None] * L                                              # (b,l,g,r,c,c)
+    y_intra = jnp.einsum("blgrij,bljgrp->bligrp", M, xdt)
+
+    # per-chunk input states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)                        # (b,l,c,h)
+    ds = decay_states.reshape(b, l, chunk, g, rep)
+    S = jnp.einsum("bljgn,bljgr,bljgrp->blgrpn", Bc, ds, xdt)              # (b,l,g,r,p,n)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :]).reshape(b, l, g, rep)          # (b,l,g,r)
+    if init_state is None:
+        h0 = jnp.zeros((b, g, rep, p, n), f32)
+    else:
+        h0 = init_state.astype(f32).reshape(b, g, rep, p, n)
+
+    def step(carry, inp):
+        dec, s_l = inp                                                     # (b,g,r), (b,g,r,p,n)
+        h_in = carry
+        h_out = h_in * dec[..., None, None] + s_l
+        return h_out, h_in
+
+    (h_final, h_ins) = jax.lax.scan(step, h0,
+                                    (jnp.moveaxis(chunk_decay, 1, 0),
+                                     jnp.moveaxis(S, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                                      # (b,l,g,r,p,n)
+
+    state_decay = jnp.exp(cum).reshape(b, l, chunk, g, rep)                # (b,l,c,g,r)
+    y_inter = jnp.einsum("blign,blgrpn,bligr->bligrp", Cc, h_ins, state_decay)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final.reshape(b, h, p, n)
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent step.
+      state: (b, h, p, n)  x: (b, h, p)  dt: (b, h)  A: (h,)  B, C: (b, g, n)
+    Returns (y: (b, h, p), new_state).
+    """
+    b, h, p, n = state.shape
+    g = B.shape[1]
+    rep = h // g
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))                           # (b,h)
+    Bh = jnp.repeat(B.astype(f32), rep, axis=1)                            # (b,h,n)
+    Ch = jnp.repeat(C.astype(f32), rep, axis=1)
+    upd = (dt.astype(f32)[..., None, None]
+           * x.astype(f32)[..., None] * Bh[:, :, None, :])                 # (b,h,p,n)
+    new_state = state.astype(f32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------- #
+# Conv helpers
+# --------------------------------------------------------------------------- #
+def causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                init_state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. xBC: (b, s, c); w: (k, c). Returns (y, tail_state)."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = init_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    y = sum(xp[:, i:i + xBC.shape[1]] * w[i].astype(xBC.dtype) for i in range(k))
+    y = jax.nn.silu(y + b.astype(xBC.dtype))
+    tail = xp[:, -(k - 1):] if k > 1 else jnp.zeros((xBC.shape[0], 0, xBC.shape[2]), xBC.dtype)
+    return y, tail
+
+
+# --------------------------------------------------------------------------- #
+# Full block forward
+# --------------------------------------------------------------------------- #
+def _split_proj(p, x: jax.Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in, n_heads, conv_dim = ssm_dims(cfg)
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    zxbcdt = jnp.einsum("bsd,de->bse", x.astype(dt_), p["w_in"].astype(dt_))
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xBC, dt
+
+
+def ssm_forward(p, x: jax.Array, cfg: ModelConfig,
+                init_conv: Optional[jax.Array] = None,
+                init_state: Optional[jax.Array] = None,
+                use_pallas: bool = False) -> Tuple[jax.Array, dict]:
+    """Training / prefill. Returns (y, {'conv': tail, 'state': final_state})."""
+    s = cfg.ssm
+    d_in, n_heads, conv_dim = ssm_dims(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    b, seq, _ = x.shape
+
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC, conv_tail = causal_conv(xBC, p["conv_w"], p["conv_b"], init_conv)
+    xs = xBC[..., :d_in].reshape(b, seq, n_heads, s.head_dim)
+    B = xBC[..., d_in:d_in + s.n_groups * s.d_state].reshape(b, seq, s.n_groups, s.d_state)
+    C = xBC[..., d_in + s.n_groups * s.d_state:].reshape(b, seq, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, state = ssd_ops.ssd_scan(xs, dt, A, B, C, chunk=s.chunk, init_state=init_state)
+    else:
+        chunk = min(s.chunk, seq)
+        y, state = ssd_chunked(xs, dt, A, B, C, chunk=chunk, init_state=init_state)
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, seq, d_in) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(dtype), p["w_out"].astype(dtype))
+    return out, {"conv": conv_tail, "state": state}
+
+
+def ssm_decode(p, x: jax.Array, cfg: ModelConfig,
+               conv_state: jax.Array, ssm_state: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step. x: (b, 1, d). Returns (y, new_conv, new_ssm)."""
+    s = cfg.ssm
+    d_in, n_heads, conv_dim = ssm_dims(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+
+    z, xBC, dt = _split_proj(p, x, cfg)
+    window = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)  # (b, k, c)
+    k = p["conv_w"].shape[0]
+    y_conv = sum(window[:, i] * p["conv_w"][i].astype(xBC.dtype) for i in range(k))
+    y_conv = jax.nn.silu(y_conv + p["conv_b"].astype(xBC.dtype))           # (b, c)
+    new_conv = window[:, 1:]
+
+    xs = y_conv[:, :d_in].reshape(b, n_heads, s.head_dim)
+    B = y_conv[:, d_in:d_in + s.n_groups * s.d_state].reshape(b, s.n_groups, s.d_state)
+    C = y_conv[:, d_in + s.n_groups * s.d_state:].reshape(b, s.n_groups, s.d_state)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, new_state = ssd_decode_step(ssm_state, xs, dt1, A, B, C)
+    y = y + xs * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, d_in) * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("be,ed->bd", y.astype(dtype), p["w_out"].astype(dtype))
+    return out[:, None], new_conv, new_state

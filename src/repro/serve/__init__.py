@@ -1,0 +1,3 @@
+from .engine import decode_fn, prefill_fn, serve_param_shapes, serve_params_cast
+
+__all__ = ["prefill_fn", "decode_fn", "serve_param_shapes", "serve_params_cast"]

@@ -1,0 +1,79 @@
+"""Serving steps: batched prefill and single-token decode with KV/SSM caches.
+
+Serving runs bf16 parameters (cast once at load). ``decode_fn`` is the
+``serve_step`` that the `decode_*` / `long_*` dry-run cells lower: one new
+token against a cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, param_shapes
+from repro.models import model as model_mod
+
+
+def serve_param_shapes(cfg: ModelConfig):
+    """Abstract param tree with float leaves cast to compute dtype."""
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return s
+
+    return jax.tree.map(cast, param_shapes(cfg))
+
+
+def serve_params_cast(params, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)
+
+
+def prefill_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Prefill: full-sequence forward, returns (last-token logits, cache)."""
+    logits, cache, _, _ = model_mod.forward(params, cfg, batch, mode="prefill")
+    return logits[:, -1], cache
+
+
+def decode_fn(params, cfg: ModelConfig, token: jax.Array, cache,
+              pos: jax.Array):
+    """One decode step: (b,) token ids + cache -> (logits, new cache)."""
+    return model_mod.decode_step(params, cfg, token, cache, pos)
+
+
+def greedy_generate(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                    steps: int, cache_len: Optional[int] = None):
+    """Reference generation loop (prefill + `steps` greedy decodes).
+
+    Used by tests/examples; production serving drives decode_fn directly.
+    """
+    from repro.models import blocks
+
+    b, s = batch["tokens"].shape
+    cache_len = cache_len or (s + steps)
+    logits, cache = prefill_fn(params, cfg, batch)
+    big = blocks.cache_struct(
+        cfg, b, cache_len,
+        enc_len=cfg.encdec.enc_len if cfg.encdec else None, mode="zeros")
+
+    def put(dst, src):
+        if src.shape == dst.shape:
+            return src.astype(dst.dtype)
+        sl = tuple(slice(0, d) for d in src.shape)
+        return dst.at[sl].set(src.astype(dst.dtype))
+
+    cache = jax.tree.map(put, big, cache)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    pos = jnp.full((b,), s, jnp.int32)
+    for i in range(steps - 1):
+        logits, cache = decode_fn(params, cfg, tok, cache, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.stack(out, axis=1)

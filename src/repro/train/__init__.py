@@ -1,0 +1,9 @@
+from .optimizer import AdamConfig, adam_init, adam_update, lr_schedule
+from .state import TrainState, train_state_axes, train_state_shapes, init_train_state
+from .trainer import TrainConfig, make_train_step
+
+__all__ = [
+    "AdamConfig", "adam_init", "adam_update", "lr_schedule",
+    "TrainState", "train_state_axes", "train_state_shapes", "init_train_state",
+    "TrainConfig", "make_train_step",
+]

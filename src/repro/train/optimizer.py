@@ -1,0 +1,162 @@
+"""Adam(W) with ZeRO-compatible, dtype-configurable state.
+
+Moments can be stored in float32, bfloat16, or blockwise-int8 (per-row absmax
+scales via ``repro.kernels.quant_blockwise``'s jnp path) — the int8 mode is the
+memory lever that lets DeepSeek-V3-671B train states fit v5e HBM (see
+EXPERIMENTS.md §Perf). Parameters can be kept in bf16 with stochastic rounding
+(Gopher/PaLM-style pure-bf16 training) or fp32.
+
+State leaves mirror the param tree; int8 leaves become ``{'q': int8, 's': f32}``
+dicts so the whole state remains an ordinary shardable pytree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"       # float32 | bfloat16 | int8
+    stochastic_round_params: bool = False
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# --------------------------------------------------------------------------- #
+# Moment (de)quantisation
+# --------------------------------------------------------------------------- #
+def _quant_rows(x: jax.Array) -> Dict[str, jax.Array]:
+    """Per-row absmax int8. x: (..., d) f32 -> {'q': int8, 's': f32 rows}."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s[..., 0]}
+
+
+def _dequant_rows(m: Dict[str, jax.Array]) -> jax.Array:
+    return m["q"].astype(jnp.float32) * m["s"][..., None]
+
+
+def _moment_init(leaf: jax.Array, dtype: str):
+    if dtype == "int8":
+        return {"q": jnp.zeros(leaf.shape, jnp.int8),
+                "s": jnp.zeros(leaf.shape[:-1], jnp.float32)}
+    return jnp.zeros(leaf.shape, jnp.dtype(dtype))
+
+
+def _moment_get(m, dtype: str) -> jax.Array:
+    if dtype == "int8":
+        return _dequant_rows(m)
+    return m.astype(jnp.float32)
+
+
+def _moment_put(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        return _quant_rows(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def moment_axes(axes_leaf: Tuple, dtype: str):
+    """Logical axes for a moment leaf mirroring a param's axes."""
+    if dtype == "int8":
+        return {"q": axes_leaf, "s": axes_leaf[:-1]}
+    return axes_leaf
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+# --------------------------------------------------------------------------- #
+# Init / update
+# --------------------------------------------------------------------------- #
+def adam_init(params, cfg: AdamConfig):
+    return {
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params),
+    }
+
+
+def adam_state_axes(param_axes, cfg: AdamConfig):
+    return {
+        "m": jax.tree.map(lambda a: moment_axes(a, cfg.moment_dtype), param_axes,
+                          is_leaf=_is_axes_leaf),
+        "v": jax.tree.map(lambda a: moment_axes(a, cfg.moment_dtype), param_axes,
+                          is_leaf=_is_axes_leaf),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _stochastic_round_bf16(x: jax.Array, key: jax.Array) -> jax.Array:
+    """f32 -> bf16 with stochastic rounding on the dropped mantissa bits."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    rnd = jax.random.bits(key, x.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    return jax.lax.bitcast_convert_type(
+        (bits + rnd) & jnp.uint32(0xFFFF0000), jnp.float32).astype(jnp.bfloat16)
+
+
+def adam_update(params, grads, opt_state, step: jax.Array, cfg: AdamConfig,
+                rng: Optional[jax.Array] = None):
+    """One Adam step. Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for i, (p, g, m, v) in enumerate(zip(flat_p, flat_g, flat_m, flat_v)):
+        g = g.astype(jnp.float32) * scale
+        m_f = _moment_get(m, cfg.moment_dtype)
+        v_f = _moment_get(v, cfg.moment_dtype)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd = (m_f / c1) / (jnp.sqrt(v_f / c2) + cfg.eps)
+        p_f = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p_f
+        p_f = p_f - lr * upd
+        if p.dtype == jnp.bfloat16 and cfg.stochastic_round_params:
+            assert rng is not None
+            p_new = _stochastic_round_bf16(p_f, jax.random.fold_in(rng, i))
+        else:
+            p_new = p_f.astype(p.dtype)
+        new_p.append(p_new)
+        new_m.append(_moment_put(m_f, cfg.moment_dtype))
+        new_v.append(_moment_put(v_f, cfg.moment_dtype))
+
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v)},
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,58 @@
+"""TrainState: params + optimizer state + step + rng as one shardable pytree.
+
+Everything needed to resume training is in this tree (plus the data-pipeline
+state, which TCE checkpoints alongside it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, init_params, param_axes, param_shapes
+
+from .optimizer import AdamConfig, adam_init, adam_state_axes
+
+
+class TrainState(NamedTuple):
+    step: jax.Array          # () int32
+    rng: jax.Array           # PRNG key (uint32 typed key array)
+    params: Any
+    opt: Dict[str, Any]      # {'m': tree, 'v': tree}
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamConfig,
+                     key: Optional[jax.Array] = None) -> TrainState:
+    key = key if key is not None else jax.random.key(0)
+    pkey, rkey = jax.random.split(key)
+    params = init_params(cfg, pkey)
+    return TrainState(step=jnp.zeros((), jnp.int32),
+                      rng=jax.random.key_data(rkey),
+                      params=params,
+                      opt=adam_init(params, opt_cfg))
+
+
+def train_state_shapes(cfg: ModelConfig, opt_cfg: AdamConfig) -> TrainState:
+    """Abstract (ShapeDtypeStruct) state — used by the dry-run; no allocation."""
+    p_shapes = param_shapes(cfg)
+
+    def one_moment(sds):
+        if opt_cfg.moment_dtype == "int8":
+            return {"q": jax.ShapeDtypeStruct(sds.shape, jnp.int8),
+                    "s": jax.ShapeDtypeStruct(sds.shape[:-1], jnp.float32)}
+        return jax.ShapeDtypeStruct(sds.shape, jnp.dtype(opt_cfg.moment_dtype))
+
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        params=p_shapes,
+        opt={"m": jax.tree.map(one_moment, p_shapes),
+             "v": jax.tree.map(one_moment, p_shapes)})
+
+
+def train_state_axes(cfg: ModelConfig, opt_cfg: AdamConfig) -> TrainState:
+    """Logical-axes tree matching TrainState (for sharding)."""
+    p_axes = param_axes(cfg)
+    return TrainState(step=(), rng=(None,), params=p_axes,
+                      opt=adam_state_axes(p_axes, opt_cfg))

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# allow running plain `pytest tests/` without PYTHONPATH=src
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,63 @@
+"""Elastic mesh-shrink: when the spare pool is exhausted the job continues on
+fewer nodes, resharding checkpoints through the store (beyond-paper)."""
+import tempfile
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.tce import DiskStore, TCEngine, TCEConfig
+from repro.core.tol import ClusterSim, JobConfig, TransomOperator, TransomServer
+from repro.core.tol.cluster import NodeState
+from repro.core.tol.orchestrator import SimulatedFault
+
+
+def test_elastic_shrink_continues_training(tmp_path):
+    server = TransomServer()
+    cluster = ClusterSim(n_nodes=4, n_spares=0)     # no replacements available
+    tce = TCEngine(TCEConfig(n_nodes=4), DiskStore(str(tmp_path)))
+    op = TransomOperator(server, cluster, tce, tee=None)
+
+    fired = set()
+
+    def fault_hook(step):
+        if step == 11 and step not in fired:
+            fired.add(step)
+            node = op.launchers[2].node
+            cluster.nodes[node].state = NodeState.FAILED
+            raise SimulatedFault("node_hw", 2)
+
+    report, w = op.run_job(
+        JobConfig(total_steps=30, ckpt_every=5, n_sim_nodes=4,
+                  allow_shrink=True, min_nodes=2),
+        jnp.zeros(()), lambda s, i: s + 1.0, fault_hook=fault_hook)
+    op.tce.close()
+
+    assert report.completed
+    assert report.shrinks == 1
+    assert report.final_nodes == 3
+    assert float(w) == 30.0
+    # the shrunk engine still checkpoints and restores
+    step, flat = op.tce.restore()
+    assert step == 30
+    assert op.tce.cfg.n_nodes == 3
+
+
+def test_shrink_refused_below_min_nodes(tmp_path):
+    server = TransomServer()
+    cluster = ClusterSim(n_nodes=2, n_spares=0)
+    tce = TCEngine(TCEConfig(n_nodes=2), DiskStore(str(tmp_path)))
+    op = TransomOperator(server, cluster, tce, tee=None)
+
+    def fault_hook(step):
+        if step == 5:
+            node = op.launchers[1].node
+            cluster.nodes[node].state = NodeState.FAILED
+            raise SimulatedFault("node_hw", 1)
+
+    report, _ = op.run_job(
+        JobConfig(total_steps=20, ckpt_every=5, n_sim_nodes=2,
+                  allow_shrink=True, min_nodes=2),
+        jnp.zeros(()), lambda s, i: s + 1.0, fault_hook=fault_hook)
+    op.tce.close()
+    assert not report.completed
+    assert report.state_history[-1][1] == "failed"

@@ -1,0 +1,155 @@
+"""Optimizer, data pipeline, training-loop behaviour."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.data import SyntheticLMData
+from repro.models import init_params
+from repro.train import (AdamConfig, TrainConfig, adam_init, adam_update,
+                         init_train_state, lr_schedule, make_train_step)
+
+
+def _tiny_params(key=None):
+    key = key or jax.random.key(0)
+    return {"a": jax.random.normal(key, (16, 32)),
+            "b": {"w": jax.random.normal(key, (8,)), "s": jnp.zeros(())}}
+
+
+def _grads_like(params, key):
+    return jax.tree.map(
+        lambda p: jax.random.normal(key, p.shape) * 0.1, params)
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+def test_lr_schedule_shape():
+    cfg = AdamConfig(lr=1e-3, warmup_steps=10, decay_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 120, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1e-3, rel=0.02)
+    assert lrs[-1] == pytest.approx(1e-4, rel=0.05)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_adam_moment_dtypes_agree(dtype):
+    """Quantised/bf16 moments track fp32 Adam within tolerance."""
+    cfg32 = AdamConfig(moment_dtype="float32", grad_clip=0, weight_decay=0)
+    cfgq = dataclasses.replace(cfg32, moment_dtype=dtype)
+    p = _tiny_params()
+    s32, sq = adam_init(p, cfg32), adam_init(p, cfgq)
+    p32 = pq = p
+    for step in range(5):
+        g = _grads_like(p, jax.random.key(step))
+        p32, s32, _ = adam_update(p32, g, s32, jnp.asarray(step), cfg32)
+        pq, sq, _ = adam_update(pq, g, sq, jnp.asarray(step), cfgq)
+    for l32, lq in zip(jax.tree.leaves(p32), jax.tree.leaves(pq)):
+        np.testing.assert_allclose(np.asarray(lq), np.asarray(l32),
+                                   rtol=0.1, atol=3e-3)
+
+
+def test_adam_int8_state_is_int8():
+    cfg = AdamConfig(moment_dtype="int8")
+    p = _tiny_params()
+    s = adam_init(p, cfg)
+    leaf = s["m"]["a"]
+    assert leaf["q"].dtype == jnp.int8 and leaf["s"].dtype == jnp.float32
+
+
+def test_stochastic_rounding_unbiased():
+    from repro.train.optimizer import _stochastic_round_bf16
+    x = jnp.full((200_000,), 1.0 + 2.0 ** -10)   # not representable in bf16
+    r = _stochastic_round_bf16(x, jax.random.key(0))
+    mean = float(jnp.mean(r.astype(jnp.float32)))
+    assert mean == pytest.approx(1.0 + 2.0 ** -10, abs=3e-5)
+    assert len(np.unique(np.asarray(r.astype(np.float32)))) == 2
+
+
+def test_grad_clip_applies():
+    cfg = AdamConfig(grad_clip=1e-3)
+    p = _tiny_params()
+    s = adam_init(p, cfg)
+    g = jax.tree.map(lambda x: jnp.full(x.shape, 100.0), p)
+    p2, _, m = adam_update(p, g, s, jnp.asarray(0), cfg)
+    assert float(m["grad_norm"]) > 1.0
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)))
+    assert delta < 0.1
+
+
+# --------------------------------------------------------------------------- #
+# grad accumulation
+# --------------------------------------------------------------------------- #
+def test_grad_accum_equivalence():
+    cfg = get_config("olmo-1b").reduced()
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    opt = AdamConfig(grad_clip=0)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    data = SyntheticLMData(cfg.vocab_size, 32, 8, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+    s1, m1 = make_train_step(cfg, opt, TrainConfig(grad_accum=1))(state, batch)
+    s2, m2 = make_train_step(cfg, opt, TrainConfig(grad_accum=4))(state, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+def test_data_deterministic_and_checkpointable():
+    d1 = SyntheticLMData(1000, 16, 8, seed=3)
+    d2 = SyntheticLMData(1000, 16, 8, seed=3)
+    b1 = next(d1)
+    np.testing.assert_array_equal(b1["tokens"], d2.batch_at(0)["tokens"])
+    # restore mid-stream
+    for _ in range(3):
+        next(d1)
+    d2.restore(type(d2.state)(4))
+    np.testing.assert_array_equal(next(d1)["tokens"], next(d2)["tokens"])
+
+
+def test_data_sharding_consistent():
+    d = SyntheticLMData(1000, 16, 8, seed=4)
+    full = d.batch_at(7)
+    parts = [d.batch_slice(7, r, 4) for r in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    d = SyntheticLMData(1000, 16, 4, seed=5)
+    b = d.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@given(step=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_data_tokens_in_vocab(step):
+    d = SyntheticLMData(777, 8, 2, seed=6)
+    b = d.batch_at(step)
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < 777).all()
+
+
+# --------------------------------------------------------------------------- #
+# loss decreases
+# --------------------------------------------------------------------------- #
+def test_loss_decreases_on_tiny_model():
+    cfg = get_config("olmo-1b").reduced()
+    opt = AdamConfig(lr=3e-3, warmup_steps=2, decay_steps=60)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    data = SyntheticLMData(cfg.vocab_size, 32, 8, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, opt, TrainConfig()),
+                      donate_argnums=(0,))
+    losses = []
+    for s in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-8:]) < np.mean(losses[:8]) - 0.2, losses
