@@ -12,19 +12,17 @@ loss trajectory is identical to an uninterrupted run.
 """
 import argparse
 import dataclasses
-import tempfile
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.tce import DiskStore, TCEngine, TCEConfig
-from repro.core.tee import OfflineTrainer, TEEService, TraceGenerator
-from repro.core.tol import ClusterSim, JobConfig, TransomOperator, TransomServer
+from repro.core.tol import JobConfig
 from repro.core.tol.cluster import NodeState
 from repro.core.tol.orchestrator import SimulatedFault
 from repro.data import SyntheticLMData
 from repro.models import ModelConfig
+from repro.sim.scenarios import build_substrate
 from repro.train import AdamConfig, TrainConfig, init_train_state, make_train_step
 
 
@@ -64,14 +62,12 @@ def main():
         losses.append((step, float(metrics["loss"])))
         return new_state
 
-    # --- TRANSOM stack ----------------------------------------------------- #
-    print("fitting TEE on normal traces ...")
-    gen = TraceGenerator(n_ranks=4, seed=1)
-    tee = TEEService(OfflineTrainer().fit([gen.normal() for _ in range(8)]))
-    server = TransomServer()
-    cluster = ClusterSim(n_nodes=4, n_spares=4)
-    tce = TCEngine(TCEConfig(n_nodes=4), DiskStore(tempfile.mkdtemp(prefix="transom_")))
-    op = TransomOperator(server, cluster, tce, tee, verbose=True)
+    # --- TRANSOM stack on the unified simulation substrate ------------------ #
+    # one SimClock + one Topology shared by TOL, TEE and TCE (repro.sim)
+    print("building substrate (TEE fit on normal traces) ...")
+    sub = build_substrate(n_nodes=4, n_spares=4, verbose=True)
+    cluster, op = sub.topology, sub.operator
+    assert sub.clock_identity_ok(), "subsystems must share one clock"
 
     faults = {steps // 3: ("node_hw", 1), 2 * steps // 3: ("network", 2)}
     fired = set()
@@ -91,7 +87,7 @@ def main():
         JobConfig(total_steps=steps, ckpt_every=max(steps // 12, 5),
                   n_sim_nodes=4),
         state0, step_fn, fault_hook=fault_hook)
-    tce.close()
+    op.tce.close()
 
     print(f"\ncompleted={report.completed} steps={report.steps_done}")
     print(f"restarts: in-place={report.restarts_inplace} "
@@ -100,7 +96,8 @@ def main():
     print(f"lost steps (recomputed): {report.lost_steps}")
     print(f"mean modeled restart: {report.mean_restart_s/60:.1f} min "
           f"(paper: ~12 min)")
-    print(f"anti-affinity registry: {sorted(server.bad_nodes())}")
+    print(f"modeled cluster time: {sub.clock.seconds:.1f} s on one shared clock")
+    print(f"anti-affinity registry: {sorted(sub.server.bad_nodes())}")
     first = [l for s, l in losses if s < 10]
     last = [l for s, l in losses[-10:]]
     print(f"loss: {sum(first)/len(first):.3f} (start) -> "

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the full test suite plus a closed-loop scenario smoke test.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== scenario smoke: single_node_crash =="
+python -m repro.sim.scenarios --run single_node_crash --seed 0 > /dev/null
+python -m repro.sim.scenarios --list
+
+echo "CI OK"

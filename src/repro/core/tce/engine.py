@@ -20,10 +20,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.sim.clock import SimClock
+from repro.sim.topology import Topology
+
 from .cache import CacheServer, EvictionConfig
 from .reconciler import Reconciler
 from .sharding import NodeShards, shard_state, unshard_state
-from .store import DiskStore, SimClock
+from .store import DiskStore
 from .transport import Fabric, MEM_BW, TransportError
 
 
@@ -106,15 +109,26 @@ class SaveHandle:
 class TCEngine:
     def __init__(self, cfg: TCEConfig, store: DiskStore,
                  fabric: Optional[Fabric] = None,
-                 clock: Optional[SimClock] = None):
+                 clock: Optional[SimClock] = None,
+                 topology: Optional[Topology] = None):
         self.cfg = cfg
         self.store = store
+        if clock is None:
+            # one clock for the whole substrate: prefer whatever the fabric /
+            # topology / store already tick on before minting a new one
+            for owner in (fabric, topology, store):
+                clock = getattr(owner, "clock", None)
+                if clock is not None:
+                    break
         self.clock = clock or SimClock()
-        self.fabric = fabric if fabric is not None else Fabric(clock=self.clock)
+        self.topology = topology if topology is not None \
+            else getattr(fabric, "topology", None)
+        self.fabric = fabric if fabric is not None \
+            else Fabric(clock=self.clock, topology=self.topology)
         evict = EvictionConfig(cfg.mem_limit_bytes, cfg.max_cycles)
         self.caches = [CacheServer(r, evict) for r in range(cfg.n_nodes)]
         self.reconciler = Reconciler(self.caches, store, self.fabric,
-                                     backup=cfg.backup)
+                                     backup=cfg.backup, clock=self.clock)
         if cfg.async_persist:
             self.reconciler.start()
         self.stats = {"saves": 0, "restores": 0, "fetch_requests": 0,
@@ -190,7 +204,6 @@ class TCEngine:
         return shards
 
     def restore(self, step: Optional[int] = None,
-                n_nodes: Optional[int] = None,
                 consumers_per_node: int = 1
                 ) -> Tuple[int, Dict[str, np.ndarray]]:
         """Waterfall restore. Returns (step, flat state dict).
@@ -198,6 +211,11 @@ class TCEngine:
         With step=None, candidate steps are tried newest-first: a checkpoint
         whose async backup/persist had not completed when the failure hit is
         skipped in favour of the freshest *recoverable* one.
+
+        The returned state is the *global* (unsharded) state: a checkpoint
+        written on N nodes restores through the ``store_full`` path onto an
+        engine with M != N nodes, and the caller re-shards by saving through
+        the new engine (elastic shrink/grow).
         """
         if step is None:
             cached = {s for c in self.caches for s in c.steps()}
@@ -207,7 +225,7 @@ class TCEngine:
             last_err: Optional[Exception] = None
             for cand in sorted(cached, reverse=True):
                 try:
-                    return self.restore(step=cand, n_nodes=n_nodes,
+                    return self.restore(step=cand,
                                         consumers_per_node=consumers_per_node)
                 except FileNotFoundError as e:
                     last_err = e
@@ -253,8 +271,6 @@ class TCEngine:
         with self._lock:
             self.stats["restores"] += 1
             self.stats["restore_sources"] = sources
-        if n_nodes is not None and n_nodes != self.cfg.n_nodes:
-            pass  # caller re-shards by constructing a new engine; state is global
         return step, state
 
     # ------------------------------------------------------------------ #

@@ -16,6 +16,8 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.sim.clock import SimClock
+
 from .cache import CacheServer
 from .store import DiskStore
 from .transport import Fabric, TransportError
@@ -24,23 +26,30 @@ from .transport import Fabric, TransportError
 class Reconciler:
     def __init__(self, caches: List[CacheServer], store: DiskStore,
                  fabric: Optional[Fabric], *, backup: bool = True,
-                 interval_s: float = 0.02):
+                 interval_s: float = 0.02,
+                 clock: Optional[SimClock] = None):
         self.caches = caches
         self.store = store
         self.fabric = fabric
         self.backup = backup
         self.interval = interval_s
+        # shared substrate clock: durability timestamps land on the same
+        # timeline as fabric transfers and TOL recovery phases
+        self.clock = clock or getattr(fabric, "clock", None) \
+            or getattr(store, "clock", None) or SimClock()
         self._stop = threading.Event()
         self._kick = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self._committed: set = set()
+        self.durable_at: Dict[int, float] = {}   # step -> modelled seconds
         self.errors: List[str] = []
         self.passes = 0
 
     # ------------------------------------------------------------------ #
     def start(self) -> None:
         if self._thread is None:
+            self._stop.clear()     # restartable (scenarios pause durability)
             self._thread = threading.Thread(target=self._loop, daemon=True)
             self._thread.start()
 
@@ -66,7 +75,14 @@ class Reconciler:
 
     # ------------------------------------------------------------------ #
     def _pending(self) -> bool:
+        n = len(self.caches)
+        persisted: Dict[int, int] = {}
         for cache in self.caches:
+            # mirror reconcile_once: a down rank's cache makes no progress,
+            # so waiting on it (or counting it toward commit eligibility)
+            # would spin quiesce() for its full timeout
+            if self.fabric is not None and self.fabric.is_down(cache.rank):
+                continue
             for step in cache.steps():
                 ent = cache.entry(step)
                 if ent is None or ent.is_backup:
@@ -75,7 +91,15 @@ class Reconciler:
                                          and len(self.caches) > 1
                                          and not ent.backed_up):
                     return True
-        return False
+                persisted[step] = persisted.get(step, 0) + 1
+        # a step with every rank persisted is commit-eligible: durable only
+        # once its manifest is written. Without this, quiesce() can return
+        # between the last rank's persist and the commit at the end of the
+        # same reconcile pass — and a crash in that window makes a waited-on
+        # checkpoint unrecoverable.
+        with self._lock:
+            return any(cnt >= n and step not in self._committed
+                       for step, cnt in persisted.items())
 
     def _loop(self) -> None:
         while not self._stop.is_set():
@@ -126,3 +150,4 @@ class Reconciler:
                 if cnt >= n and step not in self._committed:
                     self.store.commit(step, n)
                     self._committed.add(step)
+                    self.durable_at[step] = self.clock.seconds

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import json
 import os
-import threading
 import time
 import zlib
 from pathlib import Path
@@ -19,29 +18,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.sim.clock import SimClock  # noqa: F401  (canonical clock; re-exported)
+
 from .sharding import NodeShards, ShardSpec
 
 NAS_BW_PER_RANK = 71.1e6  # bytes/s — paper §IV-C: "roughly 71.1MB/s per rank"
-
-
-class SimClock:
-    """Accumulates modelled seconds (thread-safe)."""
-
-    def __init__(self):
-        self._t = 0.0
-        self._lock = threading.Lock()
-
-    def advance(self, seconds: float) -> None:
-        with self._lock:
-            self._t += seconds
-
-    @property
-    def seconds(self) -> float:
-        return self._t
-
-    def reset(self) -> None:
-        with self._lock:
-            self._t = 0.0
 
 
 class DiskStore:

@@ -15,26 +15,13 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+# Single source of truth for the Table-I taxonomy: the same categories and
+# signatures drive TOL's fault injector and this trace generator, so the
+# detector is trained/exercised on exactly the fault model the cluster uses.
+from repro.sim.faults import FAULT_CATEGORIES  # noqa: F401  (re-exported)
+from repro.sim.faults import FaultEvent, SIGNATURES as _SIGNATURES
+
 METRICS = ("gpu_util", "mem_util", "ib_tx", "nvlink_tx", "host_io")
-
-# Table I categories with observed task counts (May–Jul 2023, SenseCore)
-FAULT_CATEGORIES: Dict[str, int] = {
-    "storage": 34,
-    "network": 43,
-    "node_hw": 66,
-    "user_code": 179,
-    "other": 55,
-}
-
-# fault category -> metric signature applied during the anomaly window
-_SIGNATURES = {
-    "storage": "io_stall",
-    "network": "comm_drop",
-    "node_hw": "crash",
-    "user_code": "log_burst_exit",
-    "other": "freeze",
-    "straggler": "straggler",      # slow rank -> cluster-wide tail latency
-}
 
 
 @dataclass
@@ -63,12 +50,23 @@ class TraceGenerator:
 
     def faulty(self, category: str, T: int = 400, init_len: int = 40,
                onset: Optional[int] = None,
-               n_bad: int = 1) -> TaskTrace:
+               n_bad: int = 1,
+               ranks: Optional[Tuple[int, ...]] = None) -> TaskTrace:
+        """Generate a faulty trace. With ``ranks`` given, the fault signature
+        is planted on exactly those ranks (instead of random ones) — used to
+        replay injected :class:`FaultEvent`s through the detector."""
         assert category in _SIGNATURES, category
         m = self._base(T, init_len)
         onset = onset if onset is not None else int(
             self.rng.integers(init_len + 80, T - 80))
-        bad = tuple(self.rng.choice(self.n_ranks, size=n_bad, replace=False).tolist())
+        if ranks is not None:
+            bad = tuple(int(r) for r in ranks)
+            if any(r < 0 or r >= self.n_ranks for r in bad):
+                raise ValueError(f"ranks {bad} out of range for "
+                                 f"n_ranks={self.n_ranks}")
+        else:
+            bad = tuple(self.rng.choice(self.n_ranks, size=n_bad,
+                                        replace=False).tolist())
         logs = self._info_logs(T)
         sig = _SIGNATURES[category]
         if sig == "freeze":
@@ -118,6 +116,26 @@ class TraceGenerator:
                        "AttributeError: 'NoneType' object",
                        "RuntimeError: CUDA error"][i % 4]) for i in range(12)]
         return TaskTrace(m, sorted(logs), category, onset, bad, init_len)
+
+    def for_fault(self, category: str, bad_rank: int, T: int = 240,
+                  init_len: int = 40, onset: int = 120,
+                  degrades_only: bool = False) -> TaskTrace:
+        """Trace for one *injected* fault: signature planted on the faulted
+        rank, labelled with the injected category. Degradation-mode faults
+        (flapping link, slow node) render as the straggler signature."""
+        cat = category if category in _SIGNATURES else "other"
+        if degrades_only:
+            cat = "straggler"
+        tr = self.faulty(cat, T=T, init_len=init_len, onset=onset,
+                         ranks=(bad_rank,))
+        tr.label = category
+        return tr
+
+    def from_event(self, ev: FaultEvent, bad_rank: int, T: int = 240,
+                   init_len: int = 40, onset: int = 120) -> TaskTrace:
+        """Trace for a kernel :class:`FaultEvent` (shared fault model)."""
+        return self.for_fault(ev.category, bad_rank, T=T, init_len=init_len,
+                              onset=onset, degrades_only=ev.degrades_only)
 
     def sample_category(self) -> str:
         cats = list(FAULT_CATEGORIES)

@@ -1,133 +1,24 @@
-"""Cluster simulation: nodes, fault injection (Table I mix), scheduler with
-anti-affinity, spare pool.
+"""Cluster view for the scheduler — now a thin facade over the shared
+simulation kernel (``repro.sim``).
 
-Used three ways: (a) unit/integration tests, (b) the Fig. 6 end-to-end
-benchmark via the discrete-event clock, (c) the fault-tolerant training
-example, where *simulated node ranks* overlay a real single-process jax run.
+Historically this module kept its *own* node/fault model, separate from the
+fabric's ``_down`` set in TCE and the fault taxonomy in TEE; those three could
+silently disagree mid-scenario. The node model, fault events and injector all
+live in ``repro.sim.topology`` / ``repro.sim.faults`` now; this module only
+re-exports them under their established names.
+
+``ClusterSim`` *is* the shared :class:`repro.sim.topology.Topology` — the
+scheduler (TOL), the fabric (TCE) and the scenario engine all read and write
+the same instance.
 """
 from __future__ import annotations
 
-import enum
-import heapq
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from repro.sim.faults import (FAULT_CATEGORIES, FaultEvent,  # noqa: F401
+                              FaultInjector)
+from repro.sim.topology import Node, NodeState, Topology  # noqa: F401
 
-import numpy as np
+# Name kept for the existing tests/benchmarks/examples; same class, no shim.
+ClusterSim = Topology
 
-from repro.core.tee.traces import FAULT_CATEGORIES
-
-
-class NodeState(enum.Enum):
-    HEALTHY = "healthy"
-    DEGRADED = "degraded"     # straggler / flapping link
-    FAILED = "failed"
-    CORDONED = "cordoned"     # evicted, awaiting repair
-
-
-@dataclass
-class Node:
-    name: str
-    state: NodeState = NodeState.HEALTHY
-    fail_category: Optional[str] = None
-    repair_at: float = 0.0
-
-
-@dataclass(frozen=True)
-class FaultEvent:
-    t: float
-    node: str
-    category: str
-    degrades_only: bool       # straggler vs hard failure
-
-
-class FaultInjector:
-    """Samples a fault schedule with the Table I category mix.
-
-    Rate calibration: BLOOM saw 1-2 GPU failures/week on ~48 nodes; OPT-175B
-    logged 40+ interruptions in 2 weeks on 124 nodes. Default: each node
-    fails independently, MTBF_node ~ exp(mean_days).
-    """
-
-    def __init__(self, n_nodes: int, mean_days_between_node_faults: float = 30.0,
-                 horizon_days: float = 120.0, straggler_frac: float = 0.15,
-                 seed: int = 0):
-        self.n_nodes = n_nodes
-        self.mtbf = mean_days_between_node_faults
-        self.horizon = horizon_days
-        self.straggler_frac = straggler_frac
-        self.rng = np.random.default_rng(seed)
-
-    def schedule(self) -> List[FaultEvent]:
-        cats = list(FAULT_CATEGORIES)
-        w = np.array([FAULT_CATEGORIES[c] for c in cats], np.float64)
-        w = w / w.sum()
-        out: List[FaultEvent] = []
-        for i in range(self.n_nodes):
-            t = 0.0
-            while True:
-                t += float(self.rng.exponential(self.mtbf))
-                if t >= self.horizon:
-                    break
-                cat = str(self.rng.choice(cats, p=w))
-                out.append(FaultEvent(
-                    t * 86400.0, f"node{i:04d}", cat,
-                    bool(self.rng.random() < self.straggler_frac)))
-        out.sort(key=lambda e: e.t)
-        return out
-
-
-class ClusterSim:
-    def __init__(self, n_nodes: int, n_spares: int = 4,
-                 repair_hours: float = 24.0):
-        self.nodes: Dict[str, Node] = {
-            f"node{i:04d}": Node(f"node{i:04d}") for i in range(n_nodes)}
-        self.spares: List[Node] = [
-            Node(f"spare{i:04d}") for i in range(n_spares)]
-        self.repair_s = repair_hours * 3600.0
-        self.assigned: List[str] = list(self.nodes)   # nodes running the job
-
-    # ------------------------------------------------------------------ #
-    def apply_fault(self, ev: FaultEvent) -> None:
-        node = self.nodes.get(ev.node)
-        if node is None or node.state != NodeState.HEALTHY:
-            return
-        node.state = NodeState.DEGRADED if ev.degrades_only else NodeState.FAILED
-        node.fail_category = ev.category
-        node.repair_at = ev.t + self.repair_s
-
-    def repair_due(self, t: float) -> None:
-        for n in self.nodes.values():
-            if n.state in (NodeState.FAILED, NodeState.CORDONED) \
-                    and n.repair_at <= t:
-                n.state = NodeState.HEALTHY
-                n.fail_category = None
-
-    # -- scheduling -------------------------------------------------------- #
-    def evict(self, name: str, t: float) -> None:
-        """Cordon a bad node and return it to the repair queue."""
-        node = self.nodes.get(name)
-        if node is not None:
-            node.state = NodeState.CORDONED
-            node.repair_at = t + self.repair_s
-        if name in self.assigned:
-            self.assigned.remove(name)
-
-    def schedule_replacement(self, anti_affinity: Set[str]) -> Optional[str]:
-        """Pick a healthy node not in the anti-affinity set (fresh spare
-        first, then repaired nodes)."""
-        while self.spares:
-            sp = self.spares.pop(0)
-            self.nodes[sp.name] = sp
-            if sp.name not in anti_affinity:
-                self.assigned.append(sp.name)
-                return sp.name
-        for n in self.nodes.values():
-            if n.state == NodeState.HEALTHY and n.name not in self.assigned \
-                    and n.name not in anti_affinity:
-                self.assigned.append(n.name)
-                return n.name
-        return None
-
-    def bad_assigned_nodes(self) -> List[str]:
-        return [n for n in self.assigned
-                if self.nodes[n].state in (NodeState.FAILED, NodeState.DEGRADED)]
+__all__ = ["ClusterSim", "Topology", "Node", "NodeState",
+           "FaultEvent", "FaultInjector", "FAULT_CATEGORIES"]

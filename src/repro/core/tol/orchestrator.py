@@ -25,9 +25,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.tce.engine import TCEngine, flatten_pytree, unflatten_like
-from repro.core.tce.store import SimClock
 from repro.core.tee.service import TEEService
 from repro.core.tee.traces import TraceGenerator
+from repro.sim.clock import SimClock
 
 from .cluster import ClusterSim, NodeState
 from .fsm import JobState, LauncherFSM
@@ -89,6 +89,9 @@ class JobReport:
     state_history: List[Tuple[float, str, str]] = field(default_factory=list)
     lost_steps: int = 0
     tee_verdicts: int = 0
+    # accumulated across every recovery restore (survives elastic engine
+    # rebuilds, which reset the engine's own stats)
+    restore_sources: Dict[str, int] = field(default_factory=dict)
 
     @property
     def mean_restart_s(self) -> float:
@@ -104,7 +107,9 @@ class TransomOperator:
         self.cluster = cluster
         self.tce = tce
         self.tee = tee
-        self.clock = clock or SimClock()
+        # one clock across the whole substrate: by default adopt the engine's
+        # (which in turn adopted the fabric's / topology's / store's)
+        self.clock = clock or tce.clock
         self.verbose = verbose
         self.launchers: List[Launcher] = []
         self.fsm = LauncherFSM()
@@ -117,6 +122,8 @@ class TransomOperator:
     def _spawn_launchers(self, n: int) -> None:
         self.launchers = [Launcher(r, self.cluster.assigned[r])
                           for r in range(n)]
+        if hasattr(self.cluster, "rebind_ranks"):
+            self.cluster.rebind_ranks([l.node for l in self.launchers])
         self._elect()
 
     def _elect(self) -> None:
@@ -133,7 +140,8 @@ class TransomOperator:
     def run_job(self, cfg: JobConfig, init_state,
                 step_fn: Callable,
                 fault_hook: Optional[Callable[[int], None]] = None,
-                trace_gen: Optional[TraceGenerator] = None) -> JobReport:
+                trace_gen: Optional[TraceGenerator] = None
+                ) -> Tuple[JobReport, Any]:
         """Run `total_steps` of `step_fn(state, step) -> state` under full
         TOL+TEE+TCE protection. `fault_hook(step)` may raise SimulatedFault."""
         report = JobReport(False, 0)
@@ -173,13 +181,20 @@ class TransomOperator:
             self.fsm.to(JobState.CHECKING, str(pending_fault))
             self._log(f"anomaly at step {step}: {pending_fault}")
 
-            # TEE window scoring for node attribution
+            # TEE window scoring for node attribution: the trace is generated
+            # from the *injected* fault (same category, same rank), so the
+            # detector is exercised on exactly what the cluster experienced
             bad_ranks: List[int] = []
             if self.tee is not None and pending_fault is not None:
-                tr = trace_gen.faulty(pending_fault.category, T=240,
-                                      onset=120, n_bad=1)
-                # align injected rank with the fault
-                tr.bad_ranks = (pending_fault.node_rank,)
+                gen = trace_gen
+                if pending_fault.node_rank >= gen.n_ranks:
+                    # fleet grew past the generator's rank count: size a
+                    # fresh one to the current launchers
+                    gen = TraceGenerator(n_ranks=len(self.launchers))
+                tr = gen.for_fault(
+                    pending_fault.category, pending_fault.node_rank,
+                    T=240, onset=120,
+                    degrades_only=pending_fault.degrades_only)
                 v = self.tee.detect_task(tr)
                 report.tee_verdicts += 1
                 if v.anomalous:
@@ -205,15 +220,25 @@ class TransomOperator:
                         if l.node == n:
                             self.tce.node_failed(l.rank)
                             report.evicted_nodes.append(n)
+                # a rack with 2+ bad nodes points at a correlated root cause
+                # (switch/PDU): keep replacements out of that failure domain
+                rack_hits: Dict[str, int] = {}
+                for n in bad_nodes:
+                    if n in self.cluster.nodes:
+                        r = self.cluster.domain_of(n)
+                        rack_hits[r] = rack_hits.get(r, 0) + 1
+                avoid_domains = {r for r, c in rack_hits.items() if c >= 2}
                 replaced = True
                 for l in list(self.launchers):
                     if l.node in bad_nodes:
                         new = self.cluster.schedule_replacement(
-                            self.server.bad_nodes())
+                            self.server.bad_nodes(),
+                            avoid_domains=avoid_domains)
                         if new is None:
                             replaced = False
                             break
                         l.node = new
+                        self.cluster.bind_rank(l.rank, new)
                         self.tce.node_recovered(l.rank)   # ring-backup pull
                 if not replaced:
                     if cfg.allow_shrink and \
@@ -242,6 +267,9 @@ class TransomOperator:
             self.tce.reconciler.quiesce(10)
             try:
                 ck_step, flat = self.tce.restore()
+                for k, v in self.tce.stats["restore_sources"].items():
+                    report.restore_sources[k] = \
+                        report.restore_sources.get(k, 0) + v
             except FileNotFoundError:
                 ck_step, flat = 0, None
             if flat is not None:
@@ -268,26 +296,62 @@ class TransomOperator:
         report.state_history = [(t, s.value, r) for t, s, r in self.fsm.history]
         return report, state
 
-    def _shrink(self, bad_nodes) -> None:
-        """Rebuild the TCE engine on the surviving nodes; the latest durable
-        checkpoint reshards onto the smaller ring (store_full path)."""
+    def _rebuild_engine(self, launchers: List[Launcher]) -> None:
+        """Re-rank `launchers` 0..k-1 and rebuild TCE on that ring. The last
+        durable checkpoint reshards across the new node count on the next
+        restore (store_full path)."""
         from repro.core.tce.engine import TCEngine, TCEConfig
 
-        survivors = [l for l in self.launchers if l.node not in bad_nodes]
         self.tce.reconciler.quiesce(30)
         old = self.tce
         cfg = old.cfg
         old.close()
+        for new_rank, l in enumerate(launchers):
+            l.rank = new_rank
+        self.launchers = launchers
+        if hasattr(self.cluster, "rebind_ranks"):
+            self.cluster.rebind_ranks([l.node for l in launchers])
+        # the fabric is node-count-independent: reuse it so its clock/topology
+        # binding and transfer counters survive the rebuild. Ranks were just
+        # renumbered and every launcher in the new ring is a live node, so
+        # stale rank-down markers from the old numbering must not carry over.
+        for l in launchers:
+            old.fabric.restore_node(l.rank)
         self.tce = TCEngine(
-            TCEConfig(n_nodes=len(survivors),
+            TCEConfig(n_nodes=len(launchers),
                       mem_limit_bytes=cfg.mem_limit_bytes,
                       max_cycles=cfg.max_cycles, backup=cfg.backup,
                       async_persist=cfg.async_persist,
                       copy_threads=cfg.copy_threads, mem_bw=cfg.mem_bw),
-            old.store, clock=self.clock)
-        for new_rank, l in enumerate(survivors):
-            l.rank = new_rank
-        self.launchers = survivors
+            old.store, fabric=old.fabric, clock=self.clock)
+        # counters are cumulative job-level stats; restore_sources stays
+        # per-restore (JobReport accumulates it across rebuilds)
+        for k in ("saves", "restores", "fetch_requests", "fetch_transfers"):
+            self.tce.stats[k] += old.stats[k]
+
+    def _shrink(self, bad_nodes) -> None:
+        """Elastic shrink: continue on the surviving nodes."""
+        survivors = [l for l in self.launchers if l.node not in bad_nodes]
+        self._rebuild_engine(survivors)
+
+    def grow(self, n_new: int = 1) -> int:
+        """Elastic grow: pull healthy nodes (spares or repaired machines) back
+        into the job and reshard the checkpoint ring onto the larger fleet.
+
+        Safe to call between steps (e.g. from a scenario hook once repairs
+        complete). Returns how many nodes were actually added."""
+        added: List[Launcher] = []
+        for _ in range(n_new):
+            new = self.cluster.schedule_replacement(self.server.bad_nodes())
+            if new is None:
+                break
+            added.append(Launcher(len(self.launchers) + len(added), new))
+        if not added:
+            return 0
+        self._rebuild_engine(self.launchers + added)
+        self._elect()
+        self._log(f"elastic grow -> {len(self.launchers)} nodes")
+        return len(added)
 
     # ------------------------------------------------------------------ #
     def _warmup(self, cfg: JobConfig, report: JobReport) -> None:

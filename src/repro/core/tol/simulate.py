@@ -17,12 +17,14 @@ effective time).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .cluster import FaultInjector, FaultEvent
+from repro.sim.clock import EventQueue, SimClock
+from repro.sim.faults import FaultEvent, FaultInjector
 
 
 @dataclass(frozen=True)
@@ -78,37 +80,52 @@ class SimResult:
 
 
 def simulate(job: SimJob, pol: Policy,
-              faults: Optional[List[FaultEvent]] = None) -> SimResult:
-    rng = np.random.default_rng(job.seed + hash(pol.name) % 1000)
+              faults: Optional[List[FaultEvent]] = None,
+              clock: Optional[SimClock] = None) -> SimResult:
+    """Discrete-event run on the shared kernel: wall time lives on a
+    :class:`SimClock` and the fault schedule drains through an
+    :class:`EventQueue`, both from ``repro.sim``."""
+    # stable policy-name hash: process-salted builtin hash() would make the
+    # seeded report differ across runs
+    rng = np.random.default_rng(
+        job.seed + zlib.crc32(pol.name.encode()) % 1000)
     if faults is None:
         faults = FaultInjector(job.n_nodes, job.mtbf_node_days,
                                horizon_days=10 * job.ideal_days,
                                seed=job.seed).schedule()
-    fault_times = [f.t for f in faults]
+    clock = clock or SimClock()
+    t0 = clock.seconds                    # support a pre-advanced shared clock
+    events = EventQueue(clock)
+    for f in faults:
+        events.push(t0 + f.t, f)
 
     need = job.ideal_days * 86400.0
-    t = 0.0               # wall clock (s)
     done = 0.0            # productive compute (s)
     last_ckpt_done = 0.0  # productive time captured by the latest checkpoint
     next_ckpt = pol.ckpt_interval_s
-    fi = 0
     restarts: List[float] = []
     lost = 0.0
     ckpt_overhead = 0.0
     timeline = [(0.0, 0.0)]
 
+    def elapsed() -> float:
+        return clock.seconds - t0
+
     while done < need:
         # time until next fault (in wall time) vs until next checkpoint (in
-        # productive time) vs until completion
-        t_fault = fault_times[fi] - t if fi < len(fault_times) else np.inf
+        # productive time) vs until completion. A fault landing *during* the
+        # previous checkpoint save fires at save completion (clamp at 0 —
+        # the monotonic kernel clock forbids the old go-backwards behaviour,
+        # which also silently *subtracted* from lost compute).
+        t_fault = max(events.peek_time() - clock.seconds, 0.0)
         run_until_ckpt = next_ckpt - done
         run_until_end = need - done
         run = min(run_until_ckpt, run_until_end)
 
         if t_fault <= run:  # fault interrupts the run slice
-            t += t_fault
+            clock.advance(t_fault)
             done += t_fault
-            fi += 1
+            events.pop()
             # progress since the last checkpoint is lost
             lost_now = done - last_ckpt_done
             lost += lost_now
@@ -117,31 +134,30 @@ def simulate(job: SimJob, pol: Policy,
             detect = (pol.weekend_detect_s if weekend
                       else rng.exponential(pol.detect_mean_s))
             downtime = detect + pol.restart_s + pol.ckpt_load_s
-            t += downtime
+            clock.advance(downtime)
             restarts.append(downtime)
             # faults that hit while the job was already down are absorbed by
             # the same restart
-            while fi < len(fault_times) and fault_times[fi] <= t:
-                fi += 1
-            timeline.append((t / 86400.0, done / need))
+            events.pop_due()
+            timeline.append((elapsed() / 86400.0, done / need))
             continue
 
-        t += run
+        clock.advance(run)
         done += run
         if done >= need:
             break
         # checkpoint
-        t += pol.ckpt_save_s
+        clock.advance(pol.ckpt_save_s)
         ckpt_overhead += pol.ckpt_save_s
         last_ckpt_done = done
         next_ckpt = done + pol.ckpt_interval_s
-        timeline.append((t / 86400.0, done / need))
+        timeline.append((elapsed() / 86400.0, done / need))
 
-    timeline.append((t / 86400.0, 1.0))
+    timeline.append((elapsed() / 86400.0, 1.0))
     return SimResult(
         policy=pol.name,
-        end_to_end_days=t / 86400.0,
-        effective_frac=need / t,
+        end_to_end_days=elapsed() / 86400.0,
+        effective_frac=need / elapsed(),
         n_faults=len(restarts),
         mean_restart_s=float(np.mean(restarts)) if restarts else 0.0,
         lost_compute_days=lost / 86400.0,

@@ -1,0 +1,10 @@
+"""Pallas-TPU compiler-params name compatibility.
+
+Newer jax spells it ``pltpu.CompilerParams``; 0.4.x spells it
+``pltpu.TPUCompilerParams``. Kernels import the local name from here instead
+of each patching (and thereby mutating) the shared jax module.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._pltpu_compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
                 y_ref, hf_ref, state_scr,
@@ -105,7 +107,7 @@ def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
             jax.ShapeDtypeStruct((b, nh, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((nh, p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A, B, C, init_state)

@@ -1,0 +1,32 @@
+"""``shard_map`` compatibility across jax versions.
+
+Newer jax exposes ``jax.shard_map(f, mesh, in_specs, out_specs,
+check_vma=..., axis_names=...)``; on 0.4.x the same thing lives at
+``jax.experimental.shard_map.shard_map`` with ``check_rep`` instead of
+``check_vma`` and ``auto`` (the *complement* of the manual axes) instead of
+``axis_names``. This wrapper presents the new-style signature on both.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+_NEW = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, mesh, in_specs, out_specs, *,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = True):
+    if _NEW is not None:
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return _NEW(f, **kw)
+    from jax.experimental.shard_map import shard_map as _legacy
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _legacy(f, **kw)

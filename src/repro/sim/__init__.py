@@ -1,0 +1,30 @@
+"""Shared simulation substrate for the TRANSOM closed loop.
+
+One clock, one topology, one fault model: TOL (orchestration), TEE (anomaly
+detection) and TCE (checkpointing) all observe the same ``SimClock``, the same
+``Topology`` (nodes, spares, failure domains) and the same ``FaultEvent``
+taxonomy, so a scenario can never have the subsystems disagree about time,
+node health, or what failed.
+
+Layering (no cycles):
+
+    sim.clock      <- nothing
+    sim.faults     <- clock
+    sim.topology   <- clock, faults
+    sim.scenarios  <- everything (builds the full TEE->TOL->TCE stack)
+
+``core.tce`` / ``core.tol`` / ``core.tee`` import the kernel, never the other
+way around (``sim.scenarios`` is the one top-layer exception: it drives the
+core subsystems).
+"""
+from .clock import EventQueue, SimClock
+from .faults import (FAULT_CATEGORIES, SIGNATURES, FaultEvent, FaultInjector,
+                     cascade_events, correlated_domain_failure)
+from .topology import Node, NodeState, Topology
+
+__all__ = [
+    "SimClock", "EventQueue",
+    "FAULT_CATEGORIES", "SIGNATURES", "FaultEvent", "FaultInjector",
+    "cascade_events", "correlated_domain_failure",
+    "Node", "NodeState", "Topology",
+]

@@ -1,0 +1,91 @@
+"""The one simulation clock + a discrete-event queue.
+
+``SimClock`` accumulates *modelled* seconds: real work (memcpys, disk writes)
+runs at native speed while bandwidth/latency models charge what the same
+operation would cost on the paper's cluster. Every subsystem in a scenario
+shares one instance — the identity is asserted by tests — so TCE transfer
+costs, TOL recovery phases and DES fault timelines land on a single
+monotonically consistent timeline.
+
+``EventQueue`` is a minimal discrete-event heap keyed on modelled time. Pops
+optionally advance the bound clock, which keeps "time never runs backwards"
+true by construction.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Any, List, Optional, Tuple
+
+
+class SimClock:
+    """Accumulates modelled seconds (thread-safe, monotonic)."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+        self._lock = threading.Lock()
+
+    def advance(self, seconds: float) -> None:
+        if seconds < 0:
+            raise ValueError(f"clock cannot run backwards ({seconds} s)")
+        with self._lock:
+            self._t += seconds
+
+    def advance_to(self, t: float) -> None:
+        """Jump forward to absolute modelled time ``t`` (no-op if in the past)."""
+        with self._lock:
+            self._t = max(self._t, float(t))
+
+    @property
+    def seconds(self) -> float:
+        return self._t
+
+    def reset(self) -> None:
+        with self._lock:
+            self._t = 0.0
+
+
+class EventQueue:
+    """Min-heap of (time, payload) events on a shared :class:`SimClock`.
+
+    Payloads are opaque (fault events, callables, ...); FIFO order is
+    preserved among events scheduled for the same instant.
+    """
+
+    def __init__(self, clock: Optional[SimClock] = None):
+        self.clock = clock or SimClock()
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, payload: Any) -> None:
+        heapq.heappush(self._heap, (float(t), next(self._seq), payload))
+
+    def push_after(self, delay: float, payload: Any) -> None:
+        self.push(self.clock.seconds + delay, payload)
+
+    def peek_time(self) -> float:
+        return self._heap[0][0] if self._heap else float("inf")
+
+    def pop(self, advance_clock: bool = False) -> Tuple[float, Any]:
+        """Pop the earliest event; optionally advance the clock to its time."""
+        if not self._heap:
+            raise IndexError("pop from empty EventQueue")
+        t, _, payload = heapq.heappop(self._heap)
+        if advance_clock:
+            self.clock.advance_to(t)
+        return t, payload
+
+    def pop_due(self, t: Optional[float] = None) -> List[Tuple[float, Any]]:
+        """Pop every event with time <= t (default: the clock's now)."""
+        cutoff = self.clock.seconds if t is None else t
+        out: List[Tuple[float, Any]] = []
+        while self._heap and self._heap[0][0] <= cutoff:
+            out.append(self.pop())
+        return out
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

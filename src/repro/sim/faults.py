@@ -1,0 +1,134 @@
+"""Unified fault model: the Table-I taxonomy + injectors.
+
+This is the single source of truth for fault categories. TEE's trace
+generator maps each category to the metric signature the detector sees,
+TOL's cluster simulation samples schedules from the same category mix, and
+TCE observes the resulting node failures through the shared topology — so
+the detector is exercised on exactly the faults the cluster experiences.
+
+Beyond the paper's independent per-node failures, the injector supports
+*correlated* faults (a switch/rack failure domain taking out every member
+node at once) and *cascading* faults (a follow-on failure sampled inside the
+recovery window of a primary fault — the case that forces TCE down the
+waterfall from ring backup to persistent store).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+# Table I categories with observed task counts (May–Jul 2023, SenseCore)
+FAULT_CATEGORIES: Dict[str, int] = {
+    "storage": 34,
+    "network": 43,
+    "node_hw": 66,
+    "user_code": 179,
+    "other": 55,
+}
+
+# fault category -> metric signature TEE's trace generator applies during the
+# anomaly window ("straggler" is a degradation mode, not a Table-I category)
+SIGNATURES: Dict[str, str] = {
+    "storage": "io_stall",
+    "network": "comm_drop",
+    "node_hw": "crash",
+    "user_code": "log_burst_exit",
+    "other": "freeze",
+    "straggler": "straggler",      # slow rank -> cluster-wide tail latency
+}
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault on the shared timeline.
+
+    ``domain`` tags correlated events ("rack00", "switch01", ...) so that a
+    group of simultaneous node failures is attributable to one root cause;
+    ``cascade_of`` points at the primary event a cascading fault followed.
+    """
+    t: float
+    node: str
+    category: str
+    degrades_only: bool           # straggler/flap vs hard failure
+    domain: Optional[str] = None
+    cascade_of: Optional[str] = None
+
+
+def category_weights(cats: Optional[Sequence[str]] = None) -> np.ndarray:
+    cats = list(cats or FAULT_CATEGORIES)
+    w = np.array([FAULT_CATEGORIES[c] for c in cats], np.float64)
+    return w / w.sum()
+
+
+class FaultInjector:
+    """Samples a fault schedule with the Table I category mix.
+
+    Rate calibration: BLOOM saw 1-2 GPU failures/week on ~48 nodes; OPT-175B
+    logged 40+ interruptions in 2 weeks on 124 nodes. Default: each node
+    fails independently, MTBF_node ~ exp(mean_days).
+    """
+
+    def __init__(self, n_nodes: int, mean_days_between_node_faults: float = 30.0,
+                 horizon_days: float = 120.0, straggler_frac: float = 0.15,
+                 seed: int = 0):
+        self.n_nodes = n_nodes
+        self.mtbf = mean_days_between_node_faults
+        self.horizon = horizon_days
+        self.straggler_frac = straggler_frac
+        self.rng = np.random.default_rng(seed)
+
+    def schedule(self) -> List[FaultEvent]:
+        cats = list(FAULT_CATEGORIES)
+        w = category_weights(cats)
+        out: List[FaultEvent] = []
+        for i in range(self.n_nodes):
+            t = 0.0
+            while True:
+                t += float(self.rng.exponential(self.mtbf))
+                if t >= self.horizon:
+                    break
+                cat = str(self.rng.choice(cats, p=w))
+                out.append(FaultEvent(
+                    t * 86400.0, f"node{i:04d}", cat,
+                    bool(self.rng.random() < self.straggler_frac)))
+        out.sort(key=lambda e: e.t)
+        return out
+
+
+def correlated_domain_failure(member_nodes: Sequence[str], t: float,
+                              domain: str, category: str = "network"
+                              ) -> List[FaultEvent]:
+    """One root cause (switch/rack/PDU) failing every member node at once."""
+    return [FaultEvent(t, n, category, degrades_only=False, domain=domain)
+            for n in member_nodes]
+
+
+def cascade_events(primary: List[FaultEvent], nodes: Sequence[str],
+                   p_cascade: float = 0.1, recovery_window_s: float = 600.0,
+                   seed: int = 0) -> List[FaultEvent]:
+    """Sample follow-on faults landing inside each primary's recovery window.
+
+    A cascading fault hits a *different* node shortly after a hard failure —
+    the double-fault-during-restore case that forces restores down the
+    waterfall (memory cache -> ring backup -> persistent store). Returns the
+    combined, time-sorted schedule.
+    """
+    rng = np.random.default_rng(seed)
+    cats = list(FAULT_CATEGORIES)
+    w = category_weights(cats)
+    out = list(primary)
+    for ev in primary:
+        if ev.degrades_only or rng.random() >= p_cascade:
+            continue
+        others = [n for n in nodes if n != ev.node]
+        if not others:
+            continue
+        victim = others[int(rng.integers(len(others)))]
+        dt = float(rng.uniform(1.0, recovery_window_s))
+        out.append(FaultEvent(ev.t + dt, victim, str(rng.choice(cats, p=w)),
+                              degrades_only=False,
+                              cascade_of=f"{ev.node}@{ev.t:.0f}"))
+    out.sort(key=lambda e: e.t)
+    return out

@@ -1,0 +1,554 @@
+"""Named end-to-end fault scenarios on the unified simulation substrate.
+
+Every scenario builds ONE substrate — one :class:`SimClock`, one
+:class:`Topology`, one fault model — and drives the full TEE -> TOL -> TCE
+closed loop through it: a (simulated) training job runs step by step, faults
+fire on scripted steps, TEE scores traces generated from the *injected*
+faults, TOL evicts/reschedules/shrinks/grows, TCE restores through the
+memory -> ring-backup -> store waterfall. The run emits a deterministic
+(seeded) JSON report: recovery time, lost steps, restore source mix, the FSM
+path, and a clock-identity check proving all subsystems shared one timeline.
+
+Usage:
+
+    python -m repro.sim.scenarios --list
+    python -m repro.sim.scenarios --run single_node_crash
+    python -m repro.sim.scenarios --run all --json reports.json
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import sys
+import tempfile
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .clock import SimClock
+from .topology import NodeState, Topology
+
+
+# --------------------------------------------------------------------------- #
+# Substrate: the one-of-everything bundle
+# --------------------------------------------------------------------------- #
+@dataclass
+class Substrate:
+    """The full TRANSOM stack wired onto one clock / topology / fault model."""
+    clock: SimClock
+    topology: Topology
+    fabric: "object"          # repro.core.tce.transport.Fabric
+    store: "object"           # repro.core.tce.store.NASStore
+    tce: "object"             # repro.core.tce.engine.TCEngine
+    tee: Optional["object"]   # repro.core.tee.service.TEEService
+    server: "object"          # repro.core.tol.server.TransomServer
+    operator: "object"        # repro.core.tol.orchestrator.TransomOperator
+
+    def clock_identity_ok(self) -> bool:
+        """True iff every subsystem ticks on the *same* SimClock object."""
+        clocks = [self.operator.clock, self.tce.clock, self.fabric.clock,
+                  self.store.clock, self.topology.clock,
+                  self.tce.reconciler.clock]
+        return all(c is self.clock for c in clocks)
+
+    def close(self) -> None:
+        # the operator may have rebuilt the engine (elastic shrink/grow);
+        # close the live one, not the original handle
+        self.operator.tce.close()
+        if self.tce is not self.operator.tce:
+            self.tce.close()
+
+
+@functools.lru_cache(maxsize=4)
+def _fitted_tee(n_ranks: int, seed: int = 1):
+    """TEE model ensemble fitted on normal traces (cached: deterministic and
+    shared across scenario runs in one process)."""
+    from repro.core.tee import OfflineTrainer, TraceGenerator
+
+    gen = TraceGenerator(n_ranks=n_ranks, seed=seed)
+    return OfflineTrainer().fit([gen.normal() for _ in range(8)])
+
+
+def build_substrate(n_nodes: int = 4, n_spares: int = 4,
+                    nodes_per_rack: int = 2, store_root: Optional[str] = None,
+                    with_tee: bool = True, verbose: bool = False,
+                    nas_bw: float = 1e9) -> Substrate:
+    """Build the full closed-loop stack on a single shared clock/topology.
+
+    This is THE way to stand up TRANSOM-in-simulation: tests, benchmarks and
+    examples all come through here so there is exactly one SimClock and one
+    Topology per run (asserted by ``Substrate.clock_identity_ok``).
+    """
+    from repro.core.tce import NASStore, TCEConfig, TCEngine
+    from repro.core.tce.transport import Fabric
+    from repro.core.tee import TEEService
+    from repro.core.tol import TransomOperator, TransomServer
+
+    clock = SimClock()
+    topology = Topology(n_nodes, n_spares=n_spares,
+                        nodes_per_rack=nodes_per_rack, clock=clock)
+    store = NASStore(store_root or tempfile.mkdtemp(prefix="transom_sim_"),
+                     bw_per_rank=nas_bw, clock=clock)
+    fabric = Fabric(clock=clock, topology=topology)
+    tce = TCEngine(TCEConfig(n_nodes=n_nodes), store, fabric=fabric,
+                   clock=clock, topology=topology)
+    tee = TEEService(_fitted_tee(n_ranks=n_nodes)) if with_tee else None
+    server = TransomServer()
+    operator = TransomOperator(server, topology, tce, tee, clock=clock,
+                               verbose=verbose)
+    return Substrate(clock, topology, fabric, store, tce, tee, server,
+                     operator)
+
+
+# --------------------------------------------------------------------------- #
+# Closed-loop runner
+# --------------------------------------------------------------------------- #
+def _train_state(n: int = 256) -> Dict[str, np.ndarray]:
+    return {"w": np.zeros((n,), np.float32),
+            "opt/m": np.zeros((n,), np.float32)}
+
+
+def _step_fn(state: Dict[str, np.ndarray], step: int) -> Dict[str, np.ndarray]:
+    return {"w": state["w"] + 1.0, "opt/m": state["opt/m"] * 0.9 + 0.1}
+
+
+def _run_closed_loop(sub: Substrate, steps: int, ckpt_every: int,
+                     fault_hook: Optional[Callable[[int], None]],
+                     allow_shrink: bool = False, min_nodes: int = 2,
+                     costs=None) -> Tuple["object", Dict[str, np.ndarray]]:
+    from repro.core.tol import JobConfig
+    from repro.core.tol.orchestrator import PhaseCosts
+
+    cfg = JobConfig(total_steps=steps, ckpt_every=ckpt_every,
+                    n_sim_nodes=len(sub.topology.assigned),
+                    allow_shrink=allow_shrink, min_nodes=min_nodes,
+                    costs=costs or PhaseCosts())
+    report, state = sub.operator.run_job(cfg, _train_state(), _step_fn,
+                                         fault_hook=fault_hook)
+    return report, state
+
+
+def _report_dict(name: str, seed: int, sub: Substrate, report,
+                 extra: Optional[dict] = None) -> dict:
+    tce = sub.operator.tce    # may have been rebuilt by shrink/grow
+    out = {
+        "scenario": name,
+        "seed": seed,
+        "completed": report.completed,
+        "steps_done": report.steps_done,
+        "lost_steps": report.lost_steps,
+        "restarts": {"inplace": report.restarts_inplace,
+                     "resched": report.restarts_resched},
+        "shrinks": report.shrinks,
+        "final_nodes": report.final_nodes,
+        "evicted_nodes": sorted(report.evicted_nodes),
+        "recovery": {
+            "mean_restart_s": round(report.mean_restart_s, 3),
+            "total_downtime_s": round(report.modeled_downtime_s, 3),
+            "restart_times_s": [round(t, 3)
+                                for t in report.modeled_restart_times],
+        },
+        "restore_sources": dict(report.restore_sources),
+        "ring_fetches": {"requests": tce.stats.get("fetch_requests", 0),
+                         "transfers": tce.stats.get("fetch_transfers", 0)},
+        "tee_verdicts": report.tee_verdicts,
+        "fabric": {"transfers": tce.fabric.transfers,
+                   "bytes_moved": tce.fabric.bytes_moved},
+        "clock_s": round(sub.clock.seconds, 3),
+        "fsm_path": [s for _, s, _ in report.state_history],
+        "one_clock": sub.clock_identity_ok(),
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Scenario registry
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    run: Callable[[int], dict]     # seed -> JSON-able report
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def scenario(name: str, description: str):
+    def deco(fn: Callable[[int], dict]) -> Callable[[int], dict]:
+        SCENARIOS[name] = Scenario(name, description, fn)
+        return fn
+    return deco
+
+
+def _fail_rank(sub: Substrate, rank: int, category: str,
+               degrades_only: bool = False, quiesce: bool = True):
+    """Mark the node hosting `rank` bad on the shared topology and raise the
+    corresponding fault into the training loop.
+
+    By default the durability pipeline is quiesced first (the fault strikes
+    in steady state, not mid-save) so the recovery point — and therefore the
+    whole JSON report — is deterministic. ``save_racing_crash`` opts out to
+    model exactly that race.
+    """
+    from repro.core.tol.orchestrator import SimulatedFault
+
+    if quiesce:
+        sub.operator.tce.reconciler.quiesce(10)
+    node = sub.operator.launchers[rank].node
+    n = sub.topology.nodes[node]
+    n.state = NodeState.DEGRADED if degrades_only else NodeState.FAILED
+    n.fail_category = category
+    raise SimulatedFault(category, rank, degrades_only)
+
+
+# --------------------------------------------------------------------------- #
+@scenario("single_node_crash",
+          "One node dies of a hardware fault mid-run; TEE attributes it, TOL "
+          "evicts + reschedules onto a spare, TCE restores from ring backup.")
+def _single_node_crash(seed: int = 0) -> dict:
+    sub = build_substrate(n_nodes=4, n_spares=2)
+    fired = set()
+
+    def hook(step):
+        if step == 12 and step not in fired:
+            fired.add(step)
+            _fail_rank(sub, 1, "node_hw")
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    out = _report_dict("single_node_crash", seed, sub, report,
+                       {"final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@scenario("straggler",
+          "A slow node degrades the whole job (tail latency at collectives); "
+          "detected as a degradation, evicted, replaced.")
+def _straggler(seed: int = 0) -> dict:
+    sub = build_substrate(n_nodes=4, n_spares=2)
+    fired = set()
+
+    def hook(step):
+        if step == 14 and step not in fired:
+            fired.add(step)
+            _fail_rank(sub, 2, "node_hw", degrades_only=True)
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    out = _report_dict("straggler", seed, sub, report,
+                       {"final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@scenario("flapping_link",
+          "A link flaps: the first drop self-heals before checks complete "
+          "(in-place restart), the second sticks (evict + reschedule).")
+def _flapping_link(seed: int = 0) -> dict:
+    from repro.core.tol.orchestrator import SimulatedFault
+
+    sub = build_substrate(n_nodes=4, n_spares=2)
+    fired = set()
+
+    def hook(step):
+        if step == 8 and 8 not in fired:
+            fired.add(8)
+            # transient flap: link is back up by the time error checks run,
+            # so no node is attributable -> in-place restart
+            raise SimulatedFault("network", 3)
+        if step == 16 and 16 not in fired:
+            fired.add(16)
+            # the flap sticks: node marked degraded with a network category
+            _fail_rank(sub, 3, "network", degrades_only=True)
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    out = _report_dict("flapping_link", seed, sub, report,
+                       {"final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@scenario("correlated_switch_failure",
+          "A leaf switch dies and takes out its whole rack at once; "
+          "replacements are anti-affinity-placed outside the failed domain.")
+def _correlated_switch_failure(seed: int = 0) -> dict:
+    from repro.core.tol.orchestrator import SimulatedFault
+
+    # nodes_per_rack=2 -> rack00={node0000,node0001}, rack01={node0002,...}
+    sub = build_substrate(n_nodes=4, n_spares=4, nodes_per_rack=2)
+    fired = set()
+    rack = sub.topology.domain_of("node0000", "rack")
+
+    def hook(step):
+        if step == 12 and step not in fired:
+            fired.add(step)
+            sub.tce.reconciler.quiesce(10)
+            hit = sub.topology.fail_domain("rack", rack,
+                                           t=sub.clock.seconds,
+                                           category="network")
+            assert len(hit) >= 2, hit
+            raise SimulatedFault("network", 0)
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    # every replacement must sit outside the failed rack
+    racks_now = {sub.topology.domain_of(l.node, "rack")
+                 for l in sub.operator.launchers}
+    out = _report_dict("correlated_switch_failure", seed, sub, report,
+                       {"failed_domain": rack,
+                        "replacement_racks": sorted(racks_now),
+                        "domain_avoided": rack not in racks_now,
+                        "final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@scenario("storage_stall",
+          "Shared storage stalls (IO wait spikes, compute idles); no node is "
+          "at fault, so the job restarts in place after the stall clears.")
+def _storage_stall(seed: int = 0) -> dict:
+    from repro.core.tol.orchestrator import SimulatedFault
+
+    sub = build_substrate(n_nodes=4, n_spares=2)
+    fired = set()
+
+    def hook(step):
+        if step == 10 and step not in fired:
+            fired.add(step)
+            # infrastructure fault: no node transitions to FAILED
+            raise SimulatedFault("storage", 0)
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    out = _report_dict("storage_stall", seed, sub, report,
+                       {"final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@scenario("cascading_double_fault",
+          "A crash, then a correlated adjacent-pair crash during the catch-up "
+          "window: ring backups are gone, restore falls through to the store.")
+def _cascading_double_fault(seed: int = 0) -> dict:
+    sub = build_substrate(n_nodes=4, n_spares=4)
+    fired = set()
+
+    def hook(step):
+        if step == 12 and 12 not in fired:
+            fired.add(12)
+            _fail_rank(sub, 1, "node_hw")
+        if step == 13 and 13 not in fired:
+            fired.add(13)
+            # cascade while the first recovery is still settling: ranks 2 and
+            # 3 are ring neighbours, so rank 2's backup (held by 3) dies too
+            node3 = sub.operator.launchers[3].node
+            sub.topology.nodes[node3].state = NodeState.FAILED
+            sub.topology.nodes[node3].fail_category = "node_hw"
+            _fail_rank(sub, 2, "node_hw")
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    out = _report_dict("cascading_double_fault", seed, sub, report,
+                       {"final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@scenario("elastic_shrink_then_grow",
+          "Spare pool empty: the job shrinks to the survivors (checkpoint "
+          "reshards through the store), then grows back once repairs land.")
+def _elastic_shrink_then_grow(seed: int = 0) -> dict:
+    sub = build_substrate(n_nodes=4, n_spares=0)
+    fired = set()
+    grown = {"n": 0}
+
+    def hook(step):
+        if step == 10 and 10 not in fired:
+            fired.add(10)
+            _fail_rank(sub, 2, "node_hw")
+        if step == 20 and 20 not in fired:
+            fired.add(20)
+            # repairs complete: heal cordoned nodes, clear anti-affinity,
+            # and elastically grow back to the original fleet size
+            sub.topology.repair_due(sub.clock.seconds + sub.topology.repair_s)
+            for n in list(sub.server.bad_nodes()):
+                sub.server.clear_bad_node(n)
+            grown["n"] = sub.operator.grow(1)
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook, allow_shrink=True,
+                                     min_nodes=2)
+    out = _report_dict("elastic_shrink_then_grow", seed, sub, report,
+                       {"grows": grown["n"],
+                        "final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def _weekend_closed_loop_pair() -> Tuple[dict, dict]:
+    """The same scripted crash through the closed loop twice: automated
+    TRANSOM detection vs weekend-manual phase costs. Seed-independent."""
+    from repro.core.tol.orchestrator import PhaseCosts
+
+    def crash_at(sub, step_at):
+        fired = set()
+
+        def hook(step):
+            if step == step_at and step not in fired:
+                fired.add(step)
+                _fail_rank(sub, 1, "node_hw")
+        return hook
+
+    # automated TRANSOM loop: seconds to detect
+    sub_auto = build_substrate(n_nodes=4, n_spares=2)
+    rep_auto, _ = _run_closed_loop(sub_auto, steps=30, ckpt_every=5,
+                                   fault_hook=crash_at(sub_auto, 12))
+    auto = _report_dict("weekend_manual_baseline", 0, sub_auto, rep_auto)
+    sub_auto.close()
+
+    # manual-detection baseline: same loop, no TEE, weekend-scale phase costs
+    # (paper: 48-72 h before anyone notices a Saturday-night crash)
+    sub_man = build_substrate(n_nodes=4, n_spares=2, with_tee=False)
+    manual_costs = PhaseCosts(tee_detect=60 * 3600.0, error_check=1800.0,
+                              evict_reschedule=1800.0, inplace_restart=1800.0,
+                              warmup=600.0, restore_from_cache=255.0,
+                              restore_from_backup=255.0)
+    rep_man, _ = _run_closed_loop(sub_man, steps=30, ckpt_every=5,
+                                  fault_hook=crash_at(sub_man, 12),
+                                  costs=manual_costs)
+    man = _report_dict("weekend_manual_baseline", 0, sub_man, rep_man)
+    sub_man.close()
+    return auto, man
+
+
+@scenario("weekend_manual_baseline",
+          "The same crash handled two ways: TRANSOM's automated loop vs "
+          "weekend-manual detection; plus the Fig.6-scale DES comparison.")
+def _weekend_manual_baseline(seed: int = 0) -> dict:
+    from repro.core.tol.simulate import SimJob, compare
+
+    # the closed-loop half is seed-independent (fixed fault script and
+    # substrate seeds); only the DES varies with `seed` — cache it so
+    # multi-seed sweeps (fig6) don't rebuild two substrates per seed
+    auto, man = _weekend_closed_loop_pair()
+    auto = dict(auto, seed=seed)
+    man = dict(man, seed=seed)
+
+    # months-long discrete-event comparison on the same kernel (Fig. 6)
+    des = compare(SimJob(ideal_days=76.0, n_nodes=64, mtbf_node_days=110.0,
+                         seed=seed))
+    b, t = des["baseline"], des["transom"]
+    return {
+        "scenario": "weekend_manual_baseline",
+        "seed": seed,
+        "closed_loop": {
+            "transom_downtime_s": auto["recovery"]["total_downtime_s"],
+            "manual_downtime_s": man["recovery"]["total_downtime_s"],
+            "speedup": round(man["recovery"]["total_downtime_s"]
+                             / max(auto["recovery"]["total_downtime_s"], 1e-9), 1),
+            "transom": auto,
+            "manual": man,
+        },
+        "des_gpt3_175b": {
+            "baseline_days": round(b.end_to_end_days, 2),
+            "transom_days": round(t.end_to_end_days, 2),
+            "improvement_pct": round(100 * (1 - t.end_to_end_days
+                                            / b.end_to_end_days), 1),
+            "transom_effective_pct": round(100 * t.effective_frac, 1),
+            "transom_mean_restart_min": round(t.mean_restart_s / 60, 1),
+        },
+        "one_clock": auto["one_clock"] and man["one_clock"],
+    }
+
+
+@scenario("save_racing_crash",
+          "A node dies moments after a checkpoint enters the cache, before "
+          "persist/backup complete: restore falls back one interval "
+          "(bounded-staleness guarantee).")
+def _save_racing_crash(seed: int = 0) -> dict:
+    sub = build_substrate(n_nodes=4, n_spares=2)
+    fired = set()
+
+    def hook(step):
+        if step == 7 and 7 not in fired:
+            fired.add(7)
+            # freeze the durability pipeline after ckpt 5 is durable: the
+            # save at step 10 will reach the caches but never persist/backup
+            sub.tce.reconciler.quiesce(10)
+            sub.tce.reconciler.stop()
+        if step == 11 and 11 not in fired:
+            fired.add(11)
+            # the crash destroys rank 0's unpersisted cache, then the
+            # pipeline resumes for the survivors — ckpt 10 is unrecoverable
+            # by construction, so recovery falls back to ckpt 5 (bounded
+            # staleness: lost work <= 2 checkpoint intervals)
+            sub.tce.caches[0].wipe()
+            sub.tce.reconciler.start()
+            _fail_rank(sub, 0, "node_hw", quiesce=False)
+
+    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
+                                     fault_hook=hook)
+    out = _report_dict("save_racing_crash", seed, sub, report,
+                       {"final_w": float(state["w"][0])})
+    sub.close()
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+def run_scenario(name: str, seed: int = 0) -> dict:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; have: "
+                       f"{', '.join(sorted(SCENARIOS))}")
+    return SCENARIOS[name].run(seed)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim.scenarios",
+        description="Run named TEE->TOL->TCE fault scenarios on the unified "
+                    "simulation substrate.")
+    ap.add_argument("--list", action="store_true", help="list scenarios")
+    ap.add_argument("--run", metavar="NAME",
+                    help="scenario name, or 'all'")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the report(s) to this file")
+    args = ap.parse_args(argv)
+
+    if args.list or not args.run:
+        width = max(len(n) for n in SCENARIOS)
+        for name in sorted(SCENARIOS):
+            print(f"  {name:<{width}}  {SCENARIOS[name].description}")
+        print(f"\n{len(SCENARIOS)} scenarios. "
+              f"Run one with: python -m repro.sim.scenarios --run <name>")
+        return 0
+
+    if args.run != "all" and args.run not in SCENARIOS:
+        print(f"error: unknown scenario {args.run!r} "
+              f"(see --list)", file=sys.stderr)
+        return 2
+    names = sorted(SCENARIOS) if args.run == "all" else [args.run]
+    reports = []
+    for name in names:
+        rep = run_scenario(name, seed=args.seed)
+        reports.append(rep)
+        print(json.dumps(rep, indent=2, sort_keys=True))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(reports if len(reports) > 1 else reports[0], f,
+                      indent=2, sort_keys=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,225 @@
+"""One topology: nodes, links, spare pool, failure domains, rank binding.
+
+This replaces the three private node/health models that used to live in
+``tol/cluster.py`` (scheduler view), ``tce/transport.py`` (fabric ``_down``
+set) and the scenario drivers: a single ``Topology`` instance is the shared
+truth about which machine is healthy, which training rank it currently hosts,
+and which failure domain (rack -> leaf switch) it sits in.
+
+Failure domains make correlated faults first-class: ``fail_domain`` takes
+out every member of a rack/switch at once, and the anti-affinity scheduler
+can be asked to avoid a whole domain when placing replacements.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set
+
+from .clock import SimClock
+from .faults import FaultEvent
+
+
+class NodeState(enum.Enum):
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"     # straggler / flapping link
+    FAILED = "failed"
+    CORDONED = "cordoned"     # evicted, awaiting repair
+
+
+@dataclass
+class Node:
+    name: str
+    state: NodeState = NodeState.HEALTHY
+    fail_category: Optional[str] = None
+    repair_at: float = 0.0
+    rack: str = ""
+    switch: str = ""
+
+
+class Topology:
+    """Nodes + spares + failure domains + the rank->node binding.
+
+    The constructor signature is kept compatible with the old ``ClusterSim``
+    (``tol.cluster.ClusterSim`` is now an alias of this class); the domain
+    and rank-binding layers are additive.
+    """
+
+    def __init__(self, n_nodes: int, n_spares: int = 4,
+                 repair_hours: float = 24.0, nodes_per_rack: int = 8,
+                 racks_per_switch: int = 4, clock: Optional[SimClock] = None):
+        self.clock = clock or SimClock()
+        self.nodes_per_rack = max(nodes_per_rack, 1)
+        self.racks_per_switch = max(racks_per_switch, 1)
+        self.nodes: Dict[str, Node] = {}
+        for i in range(n_nodes):
+            self._add(f"node{i:04d}", i)
+        # spares sit in the domain numbering *after* the active nodes so a
+        # replacement naturally lands outside the failed domain
+        self.spares: List[Node] = [
+            self._make(f"spare{i:04d}", n_nodes + i) for i in range(n_spares)]
+        self.repair_s = repair_hours * 3600.0
+        self.assigned: List[str] = list(self.nodes)   # nodes running the job
+        self._rank_map: Dict[int, str] = dict(enumerate(self.assigned))
+        self._lock = threading.Lock()
+
+    # -- construction --------------------------------------------------- #
+    def _make(self, name: str, slot: int) -> Node:
+        rack = slot // self.nodes_per_rack
+        return Node(name, rack=f"rack{rack:02d}",
+                    switch=f"switch{rack // self.racks_per_switch:02d}")
+
+    def _add(self, name: str, slot: int) -> Node:
+        node = self._make(name, slot)
+        self.nodes[name] = node
+        return node
+
+    # -- failure domains ------------------------------------------------ #
+    def domain_members(self, kind: str, name: str) -> List[str]:
+        """All known nodes (incl. spares) in rack/switch ``name``."""
+        assert kind in ("rack", "switch"), kind
+        pool = list(self.nodes.values()) + list(self.spares)
+        return [n.name for n in pool if getattr(n, kind) == name]
+
+    def domain_of(self, node: str, kind: str = "rack") -> str:
+        return getattr(self.nodes[node], kind)
+
+    def fail_domain(self, kind: str, name: str, t: float = 0.0,
+                    category: str = "network") -> List[str]:
+        """Correlated failure: every assigned member of the domain goes down."""
+        hit = []
+        for n in self.domain_members(kind, name):
+            node = self.nodes.get(n)
+            if node is not None and node.state in (NodeState.HEALTHY,
+                                                   NodeState.DEGRADED):
+                node.state = NodeState.FAILED
+                node.fail_category = category
+                node.repair_at = t + self.repair_s
+                hit.append(n)
+        return hit
+
+    # -- fault application ---------------------------------------------- #
+    def apply_fault(self, ev: FaultEvent) -> None:
+        node = self.nodes.get(ev.node)
+        if node is None or node.state != NodeState.HEALTHY:
+            return
+        node.state = NodeState.DEGRADED if ev.degrades_only else NodeState.FAILED
+        node.fail_category = ev.category
+        node.repair_at = ev.t + self.repair_s
+
+    def repair_due(self, t: float) -> None:
+        for n in self.nodes.values():
+            if n.state in (NodeState.FAILED, NodeState.CORDONED) \
+                    and n.repair_at <= t:
+                n.state = NodeState.HEALTHY
+                n.fail_category = None
+
+    # -- scheduling ------------------------------------------------------ #
+    def evict(self, name: str, t: float) -> None:
+        """Cordon a bad node and return it to the repair queue."""
+        node = self.nodes.get(name)
+        if node is not None:
+            node.state = NodeState.CORDONED
+            node.repair_at = t + self.repair_s
+        if name in self.assigned:
+            self.assigned.remove(name)
+
+    def schedule_replacement(self, anti_affinity: Set[str],
+                             avoid_domains: Iterable[str] = ()
+                             ) -> Optional[str]:
+        """Pick a healthy node not in the anti-affinity set (fresh spare
+        first, then repaired nodes), preferring nodes outside the given
+        rack/switch failure domains.
+
+        Domain avoidance is a soft preference: when every candidate sits in
+        an avoided domain (small clusters where one rack holds everything),
+        an in-domain node is still returned rather than failing the job.
+        The anti-affinity set stays a hard exclusion — those nodes are known
+        bad."""
+        avoid = set(avoid_domains)
+
+        def domain_ok(n: Node) -> bool:
+            return n.rack not in avoid and n.switch not in avoid
+
+        # move the whole spare pool into the node set, then pick in
+        # preference order: spares outside avoided domains, any healthy
+        # unassigned node outside them, then the same two tiers in-domain
+        fresh = []
+        while self.spares:
+            sp = self.spares.pop(0)
+            self.nodes[sp.name] = sp
+            fresh.append(sp)
+        fresh_names = {n.name for n in fresh}
+        repaired = [n for n in self.nodes.values()
+                    if n.state == NodeState.HEALTHY
+                    and n.name not in self.assigned
+                    and n.name not in fresh_names]
+        for require_domain in (True, False):
+            for n in fresh + repaired:
+                if n.state != NodeState.HEALTHY or n.name in anti_affinity \
+                        or n.name in self.assigned:
+                    continue
+                if require_domain and not domain_ok(n):
+                    continue
+                self.assigned.append(n.name)
+                return n.name
+        return None
+
+    def bad_assigned_nodes(self) -> List[str]:
+        return [n for n in self.assigned
+                if self.nodes[n].state in (NodeState.FAILED, NodeState.DEGRADED)]
+
+    # -- rank binding (the fabric's up/down view) ------------------------ #
+    def bind_rank(self, rank: int, node: str) -> None:
+        with self._lock:
+            self._rank_map[rank] = node
+
+    def rebind_ranks(self, nodes_in_rank_order: List[str]) -> None:
+        """Reset the whole binding (elastic shrink/grow re-ranks survivors)."""
+        with self._lock:
+            self._rank_map = dict(enumerate(nodes_in_rank_order))
+
+    def node_of_rank(self, rank: int) -> Optional[str]:
+        return self._rank_map.get(rank)
+
+    def rank_of_node(self, name: str) -> Optional[int]:
+        for r, n in self._rank_map.items():
+            if n == name:
+                return r
+        return None
+
+    def is_rank_down(self, rank: int) -> bool:
+        name = self._rank_map.get(rank)
+        if name is None:
+            return True
+        node = self.nodes.get(name)
+        return node is None or node.state in (NodeState.FAILED,
+                                              NodeState.CORDONED)
+
+    def fail_rank(self, rank: int, category: str = "node_hw") -> None:
+        name = self._rank_map.get(rank)
+        node = self.nodes.get(name) if name is not None else None
+        if node is not None and node.state in (NodeState.HEALTHY,
+                                               NodeState.DEGRADED):
+            node.state = NodeState.FAILED
+            node.fail_category = category
+            node.repair_at = self.clock.seconds + self.repair_s
+
+    def restore_rank(self, rank: int) -> None:
+        name = self._rank_map.get(rank)
+        node = self.nodes.get(name) if name is not None else None
+        if node is not None and node.state in (NodeState.FAILED,
+                                               NodeState.DEGRADED):
+            node.state = NodeState.HEALTHY
+            node.fail_category = None
+
+    # -- introspection ---------------------------------------------------- #
+    def n_assigned(self) -> int:
+        return len(self.assigned)
+
+    def summary(self) -> Dict[str, int]:
+        from collections import Counter
+        c = Counter(n.state.value for n in self.nodes.values())
+        return {"assigned": len(self.assigned), "spares": len(self.spares),
+                **dict(c)}

@@ -1,0 +1,153 @@
+"""Fallback for the optional ``hypothesis`` dependency.
+
+The property-based tests use a small, fixed subset of the hypothesis API:
+``given`` / ``settings`` decorators and the ``integers``, ``sampled_from``,
+``lists`` and ``composite`` strategies (plus ``Strategy.map``). When the real
+package is installed it is used untouched; when it is missing, importing this
+module installs a deterministic mini implementation into ``sys.modules`` so
+the suite still collects and the property tests run on seeded pseudo-random
+examples instead of being skipped.
+
+The fallback is *not* hypothesis: no shrinking, no database, no coverage
+guidance — just N seeded examples per test. It exists so the tier-1 suite has
+zero hard dependencies beyond numpy/jax/pytest.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Sequence
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+class _Strategy:
+    """A strategy is just a seeded sampler: ``sample(rng) -> value``."""
+
+    def __init__(self, sample: Callable[[Any], Any]):
+        self._sample = sample
+
+    def example(self, rng) -> Any:
+        return self._sample(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def sample(rng):
+            for _ in range(1000):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive")
+        return _Strategy(sample)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements: Sequence) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+           unique: bool = False) -> _Strategy:
+    def sample(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        if not unique:
+            return [elements.example(rng) for _ in range(size)]
+        out: List = []
+        seen = set()
+        attempts = 0
+        while len(out) < size and attempts < 200 * (size + 1):
+            v = elements.example(rng)
+            attempts += 1
+            key = v if isinstance(v, (int, str, bool, float, tuple)) else repr(v)
+            if key not in seen:
+                seen.add(key)
+                out.append(v)
+        return out
+    return _Strategy(sample)
+
+
+def _composite(fn: Callable) -> Callable[..., _Strategy]:
+    @functools.wraps(fn)
+    def builder(*args, **kwargs) -> _Strategy:
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return _Strategy(sample)
+    return builder
+
+
+def _seed_for(fn: Callable) -> int:
+    # stable across runs and processes (no PYTHONHASHSEED dependence)
+    return zlib.crc32(fn.__qualname__.encode()) & 0xFFFFFFFF
+
+
+def _given(*strat_args: _Strategy, **strat_kwargs: _Strategy):
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            import numpy as np
+            n = wrapper.__dict__.get("_max_examples", 25)
+            rng = np.random.default_rng(_seed_for(fn))
+            for _ in range(n):
+                ex_args = [s.example(rng) for s in strat_args]
+                ex_kwargs = {k: s.example(rng) for k, s in strat_kwargs.items()}
+                fn(*args, *ex_args, **kwargs, **ex_kwargs)
+        # the strategy-fed parameters are supplied here, not by pytest:
+        # hide them so they are not mistaken for fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def _settings(max_examples: int = 25, deadline=None, **_kw):
+    def deco(fn: Callable) -> Callable:
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def _install() -> None:
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _integers
+    strategies.sampled_from = _sampled_from
+    strategies.booleans = _booleans
+    strategies.floats = _floats
+    strategies.lists = _lists
+    strategies.composite = _composite
+    strategies.just = lambda v: _Strategy(lambda rng: v)
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.strategies = strategies
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    mod.__is_repro_fallback__ = True
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+if not HAVE_HYPOTHESIS:
+    _install()

@@ -3,6 +3,11 @@ import sys
 
 # allow running plain `pytest tests/` without PYTHONPATH=src
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# `hypothesis` is optional: when absent, _hypo_compat installs a deterministic
+# mini implementation into sys.modules before test modules are collected
+import _hypo_compat  # noqa: E402,F401
 
 import jax  # noqa: E402
 

@@ -15,6 +15,7 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.parallel.compat import shard_map
     from repro.train.trainer import _cross_pod_mean_int8
 
     mesh = jax.make_mesh((2,), ("pod",))
@@ -23,8 +24,8 @@ SCRIPT = textwrap.dedent("""
     def f(g):
         return _cross_pod_mean_int8({"w": g}, axis="pod")["w"]
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                out_specs=P("pod"), check_vma=False))(g_local)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                            out_specs=P("pod"), check_vma=False))(g_local)
     # both pods must hold the same mean, within int8 quantisation error
     want = jnp.mean(g_local, axis=0)
     got0, got1 = np.asarray(out[0]), np.asarray(out[1])
@@ -39,5 +40,8 @@ SCRIPT = textwrap.dedent("""
 def test_cross_pod_int8_mean_on_2_devices():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # pin cpu: an unpinned child hangs probing
+                            # for accelerator platforms in this image
+                            "JAX_PLATFORMS": "cpu"})
     assert "GRAD_COMPRESSION_OK" in r.stdout, (r.stdout[-1000:], r.stderr[-2000:])

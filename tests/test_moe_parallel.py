@@ -61,5 +61,8 @@ SCRIPT = textwrap.dedent("""
 def test_shard_map_moe_matches_dense_on_8_devices():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=420,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # pin cpu: an unpinned child hangs probing
+                            # for accelerator platforms in this image
+                            "JAX_PLATFORMS": "cpu"})
     assert "MOE_PARALLEL_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])

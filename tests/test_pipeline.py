@@ -36,5 +36,8 @@ SCRIPT = textwrap.dedent("""
 def test_gpipe_matches_sequential_on_2_devices():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            # pin cpu: an unpinned child hangs probing
+                            # for accelerator platforms in this image
+                            "JAX_PLATFORMS": "cpu"})
     assert "PIPELINE_OK" in r.stdout, (r.stdout[-1000:], r.stderr[-2500:])
