@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate for the Fig. 6 policy sweep.
+
+Compares a freshly emitted ``BENCH_fig6.json`` (``benchmarks/fig6_e2e.py
+--json``) against the committed baseline and fails (exit 1) if the TRANSOM
+effective-training-time ratio regresses by more than the tolerance
+(default 5 %, relative) at any grid point, if the paper-point improvement
+over the manual baseline collapses, or if grid points disappeared.
+
+Usage:
+
+    python scripts/bench_gate.py FRESH.json [BASELINE.json] [--tolerance 0.05]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Tuple
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "baselines", "BENCH_fig6.json")
+
+
+def _point_key(point: dict) -> Tuple:
+    pol = point["policy"]
+    return (pol["ckpt_cadence_s"], pol["spare_pool"],
+            pol["shrink_threshold"], pol["fault_rate_per_week"])
+
+
+def gate(fresh: dict, baseline: dict, tolerance: float = 0.05) -> List[str]:
+    """Returns a list of failure messages (empty = pass)."""
+    fails: List[str] = []
+    fresh_pts = {_point_key(p): p for p in fresh["sweep"]["points"]}
+    for bp in baseline["sweep"]["points"]:
+        key = _point_key(bp)
+        np_ = fresh_pts.get(key)
+        if np_ is None:
+            fails.append(f"grid point {key} missing from fresh sweep")
+            continue
+        old = bp["effective_time_ratio"]
+        new = np_["effective_time_ratio"]
+        if new < old * (1.0 - tolerance):
+            fails.append(
+                f"effective-training-time ratio regressed at {key}: "
+                f"{old:.4f} -> {new:.4f} (> {tolerance:.0%} drop)")
+    old_imp = baseline["paper_point"]["improvement_pct"]
+    new_imp = fresh["paper_point"]["improvement_pct"]
+    if new_imp < old_imp - 100.0 * tolerance:
+        fails.append(f"paper-point improvement collapsed: "
+                     f"{old_imp:.2f}% -> {new_imp:.2f}%")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly emitted BENCH_fig6.json")
+    ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE,
+                    help=f"committed baseline (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="max relative regression allowed (default 0.05)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    fails = gate(fresh, baseline, tolerance=args.tolerance)
+    if fails:
+        print("BENCH GATE FAILED:", file=sys.stderr)
+        for msg in fails:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    n = len(baseline["sweep"]["points"])
+    print(f"bench gate OK: {n} grid points within {args.tolerance:.0%} of "
+          f"baseline; paper-point improvement "
+          f"{fresh['paper_point']['improvement_pct']:.2f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

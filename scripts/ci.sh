@@ -1,14 +1,35 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full test suite plus a closed-loop scenario smoke test.
+# Tier-1 CI: test suite + determinism gates + bench-regression gate + smoke.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== scenario smoke: single_node_crash =="
-python -m repro.sim.scenarios --run single_node_crash --seed 0 > /dev/null
+echo "== determinism gate: scenario reports (two runs, same seed) =="
+python -m repro.sim.scenarios --run all --seed 0 --json "$TMP/scen_a.json" > /dev/null
+python -m repro.sim.scenarios --run all --seed 0 --json "$TMP/scen_b.json" > /dev/null
+diff "$TMP/scen_a.json" "$TMP/scen_b.json" \
+    || { echo "FAIL: scenario reports are nondeterministic" >&2; exit 1; }
+
+echo "== determinism gate: policy sweep (two runs, same seed) =="
+python -m repro.sim.sweep --grid default --seed 0 --quiet --json "$TMP/sweep_a.json"
+python -m repro.sim.sweep --grid default --seed 0 --quiet --json "$TMP/sweep_b.json"
+diff "$TMP/sweep_a.json" "$TMP/sweep_b.json" \
+    || { echo "FAIL: policy sweep is nondeterministic" >&2; exit 1; }
+
+echo "== bench regression gate: Fig. 6 sweep vs committed baseline =="
+python benchmarks/fig6_e2e.py --quiet --json "$TMP/BENCH_fig6.json"
+python scripts/bench_gate.py "$TMP/BENCH_fig6.json"
+
+# every scenario (incl. weeklong_soak / policy_frontier) already ran twice
+# in the determinism gate; just confirm the catalog CLI renders
+echo "== scenario catalog =="
 python -m repro.sim.scenarios --list
 
 echo "CI OK"

@@ -11,6 +11,8 @@ Layering (no cycles):
     sim.clock      <- nothing
     sim.faults     <- clock
     sim.topology   <- clock, faults
+    sim.soak       <- clock, faults, topology (time-triggered soak engine)
+    sim.sweep      <- soak, topology (policy sweep harness)
     sim.scenarios  <- everything (builds the full TEE->TOL->TCE stack)
 
 ``core.tce`` / ``core.tol`` / ``core.tee`` import the kernel, never the other
@@ -19,12 +21,18 @@ core subsystems).
 """
 from .clock import EventQueue, SimClock
 from .faults import (FAULT_CATEGORIES, SIGNATURES, FaultEvent, FaultInjector,
-                     cascade_events, correlated_domain_failure)
-from .topology import Node, NodeState, Topology
+                     cascade_events, correlated_domain_failure,
+                     domain_outage_schedule, merge_schedules, push_schedule)
+from .soak import SoakConfig, SoakPolicy, manual_policy, run_soak, \
+    transom_policy
+from .topology import Node, NodeState, Topology, nodes_for_fault_rate
 
 __all__ = [
     "SimClock", "EventQueue",
     "FAULT_CATEGORIES", "SIGNATURES", "FaultEvent", "FaultInjector",
-    "cascade_events", "correlated_domain_failure",
-    "Node", "NodeState", "Topology",
+    "cascade_events", "correlated_domain_failure", "domain_outage_schedule",
+    "merge_schedules", "push_schedule",
+    "SoakConfig", "SoakPolicy", "manual_policy", "run_soak",
+    "transom_policy",
+    "Node", "NodeState", "Topology", "nodes_for_fault_rate",
 ]

@@ -9,14 +9,17 @@ monotonically consistent timeline.
 
 ``EventQueue`` is a minimal discrete-event heap keyed on modelled time. Pops
 optionally advance the bound clock, which keeps "time never runs backwards"
-true by construction.
+true by construction, and ``run_until`` is the canonical event loop: it drains
+events in timestamp order, advancing the clock to each event *before* its
+handler runs, so a handler can never observe a clock behind the event it is
+handling (the soak engine asserts exactly this).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import threading
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 
 class SimClock:
@@ -76,13 +79,45 @@ class EventQueue:
             self.clock.advance_to(t)
         return t, payload
 
-    def pop_due(self, t: Optional[float] = None) -> List[Tuple[float, Any]]:
-        """Pop every event with time <= t (default: the clock's now)."""
+    def pop_due(self, t: Optional[float] = None,
+                advance_clock: bool = False) -> List[Tuple[float, Any]]:
+        """Pop every event with time <= t (default: the clock's now).
+
+        With ``advance_clock=True`` the clock rides along: it is advanced to
+        each popped event's timestamp (and finally to ``t`` itself), so a
+        caller draining a future window can never observe the clock *behind*
+        an event it just popped — the monotonicity contract ``run_until``
+        and the soak loop assert.
+        """
         cutoff = self.clock.seconds if t is None else t
         out: List[Tuple[float, Any]] = []
         while self._heap and self._heap[0][0] <= cutoff:
-            out.append(self.pop())
+            out.append(self.pop(advance_clock=advance_clock))
+        if advance_clock:
+            self.clock.advance_to(cutoff)
         return out
+
+    def run_until(self, t_end: float,
+                  handler: Optional[Callable[[float, Any], None]] = None
+                  ) -> int:
+        """Event loop: drain events with time <= ``t_end`` in order.
+
+        The clock is advanced to each event's timestamp *before* the handler
+        sees it (time never runs backwards relative to the event being
+        handled). Handlers may push new events — cascades scheduled inside
+        the window are picked up in the same drain. Finally the clock lands
+        exactly on ``t_end``. Returns the number of events handled.
+        """
+        n = 0
+        while self._heap and self._heap[0][0] <= t_end:
+            t, payload = self.pop(advance_clock=True)
+            assert self.clock.seconds >= t, \
+                f"clock {self.clock.seconds} behind popped event at {t}"
+            if handler is not None:
+                handler(t, payload)
+            n += 1
+        self.clock.advance_to(t_end)
+        return n
 
     def __len__(self) -> int:
         return len(self._heap)

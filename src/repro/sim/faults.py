@@ -15,9 +15,12 @@ waterfall from ring backup to persistent store).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
+
+if TYPE_CHECKING:                       # no import cycle: clock <- faults
+    from .clock import EventQueue
 
 # Table I categories with observed task counts (May–Jul 2023, SenseCore)
 FAULT_CATEGORIES: Dict[str, int] = {
@@ -132,3 +135,52 @@ def cascade_events(primary: List[FaultEvent], nodes: Sequence[str],
                               cascade_of=f"{ev.node}@{ev.t:.0f}"))
     out.sort(key=lambda e: e.t)
     return out
+
+
+def domain_outage_schedule(topology, kind: str, mean_days: float,
+                           horizon_days: float, seed: int = 0,
+                           category: str = "network") -> List[FaultEvent]:
+    """Per-domain correlated-outage schedule: each rack/switch fails as a
+    whole at its own exponential rate (MTBF ``mean_days``), taking every
+    member node down at one timestamp.
+
+    This is the rate-driven generalisation of :func:`correlated_domain_failure`
+    — instead of one scripted outage, whole-domain failures are sampled onto
+    the timeline alongside the per-node ``FaultInjector`` schedule.
+    """
+    rng = np.random.default_rng(seed)
+    domains = sorted({getattr(n, kind) for n in topology.nodes.values()})
+    out: List[FaultEvent] = []
+    for dom in domains:
+        t = 0.0
+        while True:
+            t += float(rng.exponential(mean_days))
+            if t >= horizon_days:
+                break
+            out.extend(correlated_domain_failure(
+                topology.domain_members(kind, dom), t * 86400.0,
+                domain=dom, category=category))
+    out.sort(key=lambda e: e.t)
+    return out
+
+
+def merge_schedules(*schedules: Sequence[FaultEvent]) -> List[FaultEvent]:
+    """Merge fault schedules into one time-sorted timeline."""
+    out: List[FaultEvent] = [e for s in schedules for e in s]
+    out.sort(key=lambda e: e.t)
+    return out
+
+
+def push_schedule(queue: "EventQueue", events: Iterable[FaultEvent]) -> int:
+    """Bridge a fault schedule onto an :class:`EventQueue`.
+
+    Event times are interpreted relative to the queue clock's *current* time,
+    so a schedule can be pushed onto a mid-run shared clock without rewriting
+    timestamps. Returns the number of events pushed.
+    """
+    t0 = queue.clock.seconds
+    n = 0
+    for ev in events:
+        queue.push(t0 + ev.t, ev)
+        n += 1
+    return n

@@ -1,13 +1,23 @@
 """Named end-to-end fault scenarios on the unified simulation substrate.
 
 Every scenario builds ONE substrate — one :class:`SimClock`, one
-:class:`Topology`, one fault model — and drives the full TEE -> TOL -> TCE
-closed loop through it: a (simulated) training job runs step by step, faults
-fire on scripted steps, TEE scores traces generated from the *injected*
-faults, TOL evicts/reschedules/shrinks/grows, TCE restores through the
-memory -> ring-backup -> store waterfall. The run emits a deterministic
-(seeded) JSON report: recovery time, lost steps, restore source mix, the FSM
-path, and a clock-identity check proving all subsystems shared one timeline.
+:class:`Topology`, one fault model — and is a thin preset over one of two
+engines:
+
+* **closed-loop presets** drive the full TEE -> TOL -> TCE loop step by
+  step: the fault script is a list of ``(step, action)`` entries drained
+  through an :class:`EventQueue` keyed on step index, TEE scores traces
+  generated from the *injected* faults, TOL evicts/reschedules/shrinks/
+  grows, TCE restores through the memory -> ring-backup -> store waterfall.
+* **soak presets** (``weeklong_soak``, ``policy_frontier``) hand a
+  :class:`repro.sim.soak.SoakConfig` to the time-triggered soak engine:
+  faults fire at simulated *timestamps* (days of training) from
+  ``FaultInjector.schedule()`` / ``cascade_events`` pushed onto the shared
+  queue, and ``policy_frontier`` sweeps policy knobs over that engine.
+
+Either way the run emits a deterministic (seeded) JSON report: recovery
+time, lost steps, restore source mix, the FSM path (closed loop), and a
+clock-identity check proving all subsystems shared one timeline.
 
 Usage:
 
@@ -23,11 +33,11 @@ import json
 import sys
 import tempfile
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .clock import SimClock
+from .clock import EventQueue, SimClock
 from .topology import NodeState, Topology
 
 
@@ -114,13 +124,42 @@ def _step_fn(state: Dict[str, np.ndarray], step: int) -> Dict[str, np.ndarray]:
     return {"w": state["w"] + 1.0, "opt/m": state["opt/m"] * 0.9 + 0.1}
 
 
+# a closed-loop fault script: (step, action) entries; actions may raise
+# SimulatedFault to interrupt training at that step
+StepScript = Sequence[Tuple[int, Callable[[], None]]]
+
+
+def _script_hook(script: StepScript) -> Callable[[int], None]:
+    """Compile a step-keyed fault script into a ``fault_hook``.
+
+    The script drains through an :class:`EventQueue` whose private clock
+    counts *step indices* rather than seconds: each entry fires exactly
+    once, at the first step that reaches its index. An action that raises
+    (``SimulatedFault``) leaves later entries queued, so they fire after
+    recovery rewinds and the loop climbs back to their step.
+    """
+    q = EventQueue()
+    for at_step, action in script:
+        q.push(float(at_step), action)
+
+    def hook(step: int) -> None:
+        while q and q.peek_time() <= step:
+            _, action = q.pop(advance_clock=True)
+            action()
+    return hook
+
+
 def _run_closed_loop(sub: Substrate, steps: int, ckpt_every: int,
-                     fault_hook: Optional[Callable[[int], None]],
+                     script: Optional[StepScript] = None,
+                     fault_hook: Optional[Callable[[int], None]] = None,
                      allow_shrink: bool = False, min_nodes: int = 2,
                      costs=None) -> Tuple["object", Dict[str, np.ndarray]]:
     from repro.core.tol import JobConfig
     from repro.core.tol.orchestrator import PhaseCosts
 
+    if script is not None:
+        assert fault_hook is None, "pass either script or fault_hook"
+        fault_hook = _script_hook(script)
     cfg = JobConfig(total_steps=steps, ckpt_every=ckpt_every,
                     n_sim_nodes=len(sub.topology.assigned),
                     allow_shrink=allow_shrink, min_nodes=min_nodes,
@@ -212,15 +251,9 @@ def _fail_rank(sub: Substrate, rank: int, category: str,
           "evicts + reschedules onto a spare, TCE restores from ring backup.")
 def _single_node_crash(seed: int = 0) -> dict:
     sub = build_substrate(n_nodes=4, n_spares=2)
-    fired = set()
-
-    def hook(step):
-        if step == 12 and step not in fired:
-            fired.add(step)
-            _fail_rank(sub, 1, "node_hw")
-
-    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+    report, state = _run_closed_loop(
+        sub, steps=30, ckpt_every=5,
+        script=[(12, lambda: _fail_rank(sub, 1, "node_hw"))])
     out = _report_dict("single_node_crash", seed, sub, report,
                        {"final_w": float(state["w"][0])})
     sub.close()
@@ -232,15 +265,10 @@ def _single_node_crash(seed: int = 0) -> dict:
           "detected as a degradation, evicted, replaced.")
 def _straggler(seed: int = 0) -> dict:
     sub = build_substrate(n_nodes=4, n_spares=2)
-    fired = set()
-
-    def hook(step):
-        if step == 14 and step not in fired:
-            fired.add(step)
-            _fail_rank(sub, 2, "node_hw", degrades_only=True)
-
-    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+    report, state = _run_closed_loop(
+        sub, steps=30, ckpt_every=5,
+        script=[(14, lambda: _fail_rank(sub, 2, "node_hw",
+                                        degrades_only=True))])
     out = _report_dict("straggler", seed, sub, report,
                        {"final_w": float(state["w"][0])})
     sub.close()
@@ -254,21 +282,18 @@ def _flapping_link(seed: int = 0) -> dict:
     from repro.core.tol.orchestrator import SimulatedFault
 
     sub = build_substrate(n_nodes=4, n_spares=2)
-    fired = set()
 
-    def hook(step):
-        if step == 8 and 8 not in fired:
-            fired.add(8)
-            # transient flap: link is back up by the time error checks run,
-            # so no node is attributable -> in-place restart
-            raise SimulatedFault("network", 3)
-        if step == 16 and 16 not in fired:
-            fired.add(16)
-            # the flap sticks: node marked degraded with a network category
-            _fail_rank(sub, 3, "network", degrades_only=True)
+    def transient_flap():
+        # transient flap: link is back up by the time error checks run,
+        # so no node is attributable -> in-place restart
+        raise SimulatedFault("network", 3)
 
-    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+    report, state = _run_closed_loop(
+        sub, steps=30, ckpt_every=5,
+        script=[(8, transient_flap),
+                # the flap sticks: node marked degraded, network category
+                (16, lambda: _fail_rank(sub, 3, "network",
+                                        degrades_only=True))])
     out = _report_dict("flapping_link", seed, sub, report,
                        {"final_w": float(state["w"][0])})
     sub.close()
@@ -283,21 +308,17 @@ def _correlated_switch_failure(seed: int = 0) -> dict:
 
     # nodes_per_rack=2 -> rack00={node0000,node0001}, rack01={node0002,...}
     sub = build_substrate(n_nodes=4, n_spares=4, nodes_per_rack=2)
-    fired = set()
     rack = sub.topology.domain_of("node0000", "rack")
 
-    def hook(step):
-        if step == 12 and step not in fired:
-            fired.add(step)
-            sub.tce.reconciler.quiesce(10)
-            hit = sub.topology.fail_domain("rack", rack,
-                                           t=sub.clock.seconds,
-                                           category="network")
-            assert len(hit) >= 2, hit
-            raise SimulatedFault("network", 0)
+    def kill_rack():
+        sub.tce.reconciler.quiesce(10)
+        hit = sub.topology.fail_domain("rack", rack, t=sub.clock.seconds,
+                                       category="network")
+        assert len(hit) >= 2, hit
+        raise SimulatedFault("network", 0)
 
     report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+                                     script=[(12, kill_rack)])
     # every replacement must sit outside the failed rack
     racks_now = {sub.topology.domain_of(l.node, "rack")
                  for l in sub.operator.launchers}
@@ -317,16 +338,13 @@ def _storage_stall(seed: int = 0) -> dict:
     from repro.core.tol.orchestrator import SimulatedFault
 
     sub = build_substrate(n_nodes=4, n_spares=2)
-    fired = set()
 
-    def hook(step):
-        if step == 10 and step not in fired:
-            fired.add(step)
-            # infrastructure fault: no node transitions to FAILED
-            raise SimulatedFault("storage", 0)
+    def stall():
+        # infrastructure fault: no node transitions to FAILED
+        raise SimulatedFault("storage", 0)
 
     report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+                                     script=[(10, stall)])
     out = _report_dict("storage_stall", seed, sub, report,
                        {"final_w": float(state["w"][0])})
     sub.close()
@@ -338,23 +356,19 @@ def _storage_stall(seed: int = 0) -> dict:
           "window: ring backups are gone, restore falls through to the store.")
 def _cascading_double_fault(seed: int = 0) -> dict:
     sub = build_substrate(n_nodes=4, n_spares=4)
-    fired = set()
 
-    def hook(step):
-        if step == 12 and 12 not in fired:
-            fired.add(12)
-            _fail_rank(sub, 1, "node_hw")
-        if step == 13 and 13 not in fired:
-            fired.add(13)
-            # cascade while the first recovery is still settling: ranks 2 and
-            # 3 are ring neighbours, so rank 2's backup (held by 3) dies too
-            node3 = sub.operator.launchers[3].node
-            sub.topology.nodes[node3].state = NodeState.FAILED
-            sub.topology.nodes[node3].fail_category = "node_hw"
-            _fail_rank(sub, 2, "node_hw")
+    def cascade():
+        # cascade while the first recovery is still settling: ranks 2 and
+        # 3 are ring neighbours, so rank 2's backup (held by 3) dies too
+        node3 = sub.operator.launchers[3].node
+        sub.topology.nodes[node3].state = NodeState.FAILED
+        sub.topology.nodes[node3].fail_category = "node_hw"
+        _fail_rank(sub, 2, "node_hw")
 
-    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+    report, state = _run_closed_loop(
+        sub, steps=30, ckpt_every=5,
+        script=[(12, lambda: _fail_rank(sub, 1, "node_hw")),
+                (13, cascade)])
     out = _report_dict("cascading_double_fault", seed, sub, report,
                        {"final_w": float(state["w"][0])})
     sub.close()
@@ -366,25 +380,21 @@ def _cascading_double_fault(seed: int = 0) -> dict:
           "reshards through the store), then grows back once repairs land.")
 def _elastic_shrink_then_grow(seed: int = 0) -> dict:
     sub = build_substrate(n_nodes=4, n_spares=0)
-    fired = set()
     grown = {"n": 0}
 
-    def hook(step):
-        if step == 10 and 10 not in fired:
-            fired.add(10)
-            _fail_rank(sub, 2, "node_hw")
-        if step == 20 and 20 not in fired:
-            fired.add(20)
-            # repairs complete: heal cordoned nodes, clear anti-affinity,
-            # and elastically grow back to the original fleet size
-            sub.topology.repair_due(sub.clock.seconds + sub.topology.repair_s)
-            for n in list(sub.server.bad_nodes()):
-                sub.server.clear_bad_node(n)
-            grown["n"] = sub.operator.grow(1)
+    def repairs_land():
+        # repairs complete: heal cordoned nodes, clear anti-affinity,
+        # and elastically grow back to the original fleet size
+        sub.topology.repair_due(sub.clock.seconds + sub.topology.repair_s)
+        for n in list(sub.server.bad_nodes()):
+            sub.server.clear_bad_node(n)
+        grown["n"] = sub.operator.grow(1)
 
-    report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook, allow_shrink=True,
-                                     min_nodes=2)
+    report, state = _run_closed_loop(
+        sub, steps=30, ckpt_every=5,
+        script=[(10, lambda: _fail_rank(sub, 2, "node_hw")),
+                (20, repairs_land)],
+        allow_shrink=True, min_nodes=2)
     out = _report_dict("elastic_shrink_then_grow", seed, sub, report,
                        {"grows": grown["n"],
                         "final_w": float(state["w"][0])})
@@ -399,18 +409,12 @@ def _weekend_closed_loop_pair() -> Tuple[dict, dict]:
     from repro.core.tol.orchestrator import PhaseCosts
 
     def crash_at(sub, step_at):
-        fired = set()
-
-        def hook(step):
-            if step == step_at and step not in fired:
-                fired.add(step)
-                _fail_rank(sub, 1, "node_hw")
-        return hook
+        return [(step_at, lambda: _fail_rank(sub, 1, "node_hw"))]
 
     # automated TRANSOM loop: seconds to detect
     sub_auto = build_substrate(n_nodes=4, n_spares=2)
     rep_auto, _ = _run_closed_loop(sub_auto, steps=30, ckpt_every=5,
-                                   fault_hook=crash_at(sub_auto, 12))
+                                   script=crash_at(sub_auto, 12))
     auto = _report_dict("weekend_manual_baseline", 0, sub_auto, rep_auto)
     sub_auto.close()
 
@@ -422,7 +426,7 @@ def _weekend_closed_loop_pair() -> Tuple[dict, dict]:
                               warmup=600.0, restore_from_cache=255.0,
                               restore_from_backup=255.0)
     rep_man, _ = _run_closed_loop(sub_man, steps=30, ckpt_every=5,
-                                  fault_hook=crash_at(sub_man, 12),
+                                  script=crash_at(sub_man, 12),
                                   costs=manual_costs)
     man = _report_dict("weekend_manual_baseline", 0, sub_man, rep_man)
     sub_man.close()
@@ -475,31 +479,70 @@ def _weekend_manual_baseline(seed: int = 0) -> dict:
           "(bounded-staleness guarantee).")
 def _save_racing_crash(seed: int = 0) -> dict:
     sub = build_substrate(n_nodes=4, n_spares=2)
-    fired = set()
 
-    def hook(step):
-        if step == 7 and 7 not in fired:
-            fired.add(7)
-            # freeze the durability pipeline after ckpt 5 is durable: the
-            # save at step 10 will reach the caches but never persist/backup
-            sub.tce.reconciler.quiesce(10)
-            sub.tce.reconciler.stop()
-        if step == 11 and 11 not in fired:
-            fired.add(11)
-            # the crash destroys rank 0's unpersisted cache, then the
-            # pipeline resumes for the survivors — ckpt 10 is unrecoverable
-            # by construction, so recovery falls back to ckpt 5 (bounded
-            # staleness: lost work <= 2 checkpoint intervals)
-            sub.tce.caches[0].wipe()
-            sub.tce.reconciler.start()
-            _fail_rank(sub, 0, "node_hw", quiesce=False)
+    def freeze_pipeline():
+        # freeze the durability pipeline after ckpt 5 is durable: the
+        # save at step 10 will reach the caches but never persist/backup
+        sub.tce.reconciler.quiesce(10)
+        sub.tce.reconciler.stop()
+
+    def crash_unpersisted():
+        # the crash destroys rank 0's unpersisted cache, then the
+        # pipeline resumes for the survivors — ckpt 10 is unrecoverable
+        # by construction, so recovery falls back to ckpt 5 (bounded
+        # staleness: lost work <= 2 checkpoint intervals)
+        sub.tce.caches[0].wipe()
+        sub.tce.reconciler.start()
+        _fail_rank(sub, 0, "node_hw", quiesce=False)
 
     report, state = _run_closed_loop(sub, steps=30, ckpt_every=5,
-                                     fault_hook=hook)
+                                     script=[(7, freeze_pipeline),
+                                             (11, crash_unpersisted)])
     out = _report_dict("save_racing_crash", seed, sub, report,
                        {"final_w": float(state["w"][0])})
     sub.close()
     return out
+
+
+# --------------------------------------------------------------------------- #
+# Soak presets: time-triggered long-horizon runs on the same substrate
+# --------------------------------------------------------------------------- #
+@scenario("weeklong_soak",
+          "A simulated week of training on 16 nodes under the stochastic "
+          "Table-I mix plus cascades and whole-rack outages: faults fire at "
+          "timestamps from the EventQueue, not scripted steps.")
+def _weeklong_soak(seed: int = 0) -> dict:
+    from .soak import SoakConfig, run_soak
+
+    rep = run_soak(SoakConfig(ideal_days=7.0, n_nodes=16, n_spares=2,
+                              mtbf_node_days=30.0, p_cascade=0.25,
+                              rack_mtbf_days=90.0, shrink_threshold=0.5),
+                   seed=seed)
+    return dict(rep, scenario="weeklong_soak")
+
+
+@scenario("policy_frontier",
+          "A quick policy sweep (checkpoint cadence x spare pool) over the "
+          "soak engine: TRANSOM vs manual baseline on the same fault "
+          "timeline, reporting the best-effective-time frontier.")
+def _policy_frontier(seed: int = 0) -> dict:
+    from .sweep import run_sweep
+
+    res = run_sweep("small", seed=seed)
+    return {
+        "scenario": "policy_frontier",
+        "seed": seed,
+        "grid": res["grid"],
+        "n_points": res["n_points"],
+        "frontier": res["frontier"],
+        "points": [{"policy": p["policy"],
+                    "effective_time_ratio": p["effective_time_ratio"],
+                    "lost_steps": p["lost_steps"],
+                    "improvement_pct": p["improvement_pct"]}
+                   for p in res["points"]],
+        "one_clock": all(p["transom"]["one_clock"] and
+                         p["baseline"]["one_clock"] for p in res["points"]),
+    }
 
 
 # --------------------------------------------------------------------------- #

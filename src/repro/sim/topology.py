@@ -38,6 +38,21 @@ class Node:
     switch: str = ""
 
 
+def nodes_for_fault_rate(faults_per_week: float,
+                         mtbf_node_days: float) -> int:
+    """MTBF-scaled node count: the fleet size at which independent per-node
+    failures (MTBF ``mtbf_node_days``) aggregate to the target cluster-wide
+    fault rate.
+
+    Anchors: BLOOM saw 1-2 GPU failures/week on ~48 nodes (MTBF ~170-340 d);
+    OPT-175B logged 40+ interruptions in 2 weeks on 124 nodes. The policy
+    sweep uses this to turn a ``fault_rate`` axis into a concrete cluster.
+    """
+    if faults_per_week <= 0 or mtbf_node_days <= 0:
+        raise ValueError("faults_per_week and mtbf_node_days must be > 0")
+    return max(1, round(faults_per_week * mtbf_node_days / 7.0))
+
+
 class Topology:
     """Nodes + spares + failure domains + the rank->node binding.
 

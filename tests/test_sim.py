@@ -40,6 +40,43 @@ def test_event_queue_orders_and_advances_clock():
     assert q.peek_time() == float("inf")
 
 
+def test_pop_due_can_ride_the_clock_forward():
+    # popping a future window with advance_clock=True must never leave the
+    # clock behind an event it handed out (the soak-loop monotonicity fix)
+    c = SimClock()
+    q = EventQueue(c)
+    q.push(30.0, "x")
+    q.push(70.0, "y")
+    out = q.pop_due(100.0, advance_clock=True)
+    assert [p for _, p in out] == ["x", "y"]
+    assert c.seconds == 100.0            # landed exactly on the cutoff
+    # and without the flag the old behaviour (clock untouched) is preserved
+    c2 = SimClock()
+    q2 = EventQueue(c2)
+    q2.push(30.0, "x")
+    q2.pop_due(100.0)
+    assert c2.seconds == 0.0
+
+
+def test_run_until_advances_clock_before_each_handler():
+    c = SimClock()
+    q = EventQueue(c)
+    seen = []
+    q.push(10.0, "a")
+    q.push(20.0, "b")
+
+    def handler(t, payload):
+        # the clock is already at (or past) the event when the handler runs
+        assert c.seconds >= t
+        seen.append(payload)
+        if payload == "a":
+            q.push_after(5.0, "cascade")   # lands at 15.0, inside the window
+
+    n = q.run_until(50.0, handler)
+    assert seen == ["a", "cascade", "b"]
+    assert n == 3 and c.seconds == 50.0
+
+
 # --------------------------------------------------------------------------- #
 # one clock / one topology identity (the tentpole invariant)
 # --------------------------------------------------------------------------- #
@@ -166,6 +203,53 @@ def test_cascade_events_land_in_recovery_window():
     assert casc.node != "node0000"
     assert 1000.0 < casc.t <= 1300.0
     assert evs == sorted(evs, key=lambda e: e.t)
+
+
+def test_cascade_events_drive_through_event_queue():
+    # the time-triggered path: a cascading schedule pushed onto the shared
+    # queue drains in timestamp order, with the cascade firing after its
+    # primary and the clock never behind the event being handled
+    from repro.sim import push_schedule
+
+    clock = SimClock()
+    q = EventQueue(clock)
+    prim = [FaultEvent(1000.0, "node0000", "node_hw", False)]
+    sched = cascade_events(prim, [f"node{i:04d}" for i in range(4)],
+                           p_cascade=1.0, recovery_window_s=300.0, seed=7)
+    assert push_schedule(q, sched) == 2
+    seen = []
+    q.run_until(5000.0, lambda t, ev: seen.append((t, ev)))
+    assert [ev.node for _, ev in seen][0] == "node0000"
+    assert seen[1][1].cascade_of is not None
+    assert seen[0][0] < seen[1][0] <= 1300.0
+    assert clock.seconds == 5000.0
+
+
+def test_correlated_domain_failure_through_event_queue():
+    # a whole-domain outage pushed onto the queue takes out every member at
+    # one timestamp when applied to the topology by the event loop
+    from repro.sim import push_schedule
+
+    topo = Topology(n_nodes=4, n_spares=0, nodes_per_rack=2)
+    q = EventQueue(topo.clock)
+    members = topo.domain_members("rack", "rack00")
+    push_schedule(q, correlated_domain_failure(members, t=60.0,
+                                               domain="rack00"))
+    q.run_until(120.0, lambda t, ev: topo.apply_fault(ev))
+    assert sorted(topo.bad_assigned_nodes()) == sorted(members)
+    for name in members:
+        assert topo.nodes[name].state == NodeState.FAILED
+    assert topo.clock.seconds == 120.0
+
+
+def test_push_schedule_offsets_by_queue_now():
+    from repro.sim import push_schedule
+
+    clock = SimClock()
+    clock.advance(500.0)
+    q = EventQueue(clock)
+    push_schedule(q, [FaultEvent(10.0, "node0000", "node_hw", False)])
+    assert q.peek_time() == 510.0    # schedule times are relative to now
 
 
 def test_fault_injector_schedule_is_seeded():
