@@ -1,0 +1,132 @@
+"""Fleet bench — multi-job scheduling, spare arbitration, NAS contention.
+
+Runs the named fleet presets (``repro.fleet.presets``) plus a NAS-contention
+microbench on the :class:`~repro.core.tce.store.SharedBandwidth` arbiter and
+emits a deterministic ``BENCH_fleet.json`` for ``scripts/bench_gate.py``
+(the CI fleet-regression gate). Gated quantities:
+
+* per-preset **fleet utilization** (productive node-seconds over cluster
+  node-seconds) must not regress;
+* the **preemption gain** — how much faster the high-priority job recovers
+  when a low-priority job donates a node — must not collapse;
+* the NAS arbiter's measured contention slowdown must stay ~2x for two
+  equal concurrent flows (processor sharing is exact, not approximate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.tce.store import SharedBandwidth
+from repro.fleet.presets import run_preset
+
+# presets whose fleet-level utilization is gated (priority_preemption emits
+# a comparison report, not a single fleet report, and is gated separately)
+GATED_PRESETS = ("two_jobs_rack_outage", "spare_pool_starvation",
+                 "mixed_policy_fleet", "fleet_week_soak")
+
+
+def nas_contention_micro(bw: float = 284.4e6, nbytes: float = 8e9) -> dict:
+    """Two equal flows sharing one uplink: each must take ~2x its solo time."""
+    solo = SharedBandwidth(bw).transfer(0.0, nbytes, "solo")
+    arb = SharedBandwidth(bw)
+    arb.start(0.0, nbytes, "save")           # a save already in flight...
+    contended = arb.transfer(0.0, nbytes, "restore")   # ...slows the restore
+    return {
+        "bw_total": bw,
+        "nbytes": nbytes,
+        "solo_s": round(solo, 3),
+        "contended_s": round(contended, 3),
+        "slowdown": round(contended / solo, 4),
+    }
+
+
+def build_payload(seed: int = 0) -> dict:
+    """The deterministic fleet artifact: preset summaries + microbench."""
+    presets = {}
+    for name in GATED_PRESETS:
+        rep = run_preset(name, seed=seed)
+        presets[name] = {
+            "utilization": rep["fleet"]["utilization"],
+            "makespan_days": rep["makespan_days"],
+            "preemptions": rep["fleet"]["preemptions"],
+            "claims": {
+                "granted": rep["fleet"]["scheduler"]["claims_granted"],
+                "denied": rep["fleet"]["scheduler"]["claims_denied"],
+            },
+            "jobs": {j: {"effective_time_ratio": r["effective_time_ratio"],
+                         "restarts": r["recovery"]["restarts"],
+                         "restore_sources": r["restore_sources"]}
+                     for j, r in rep["jobs"].items()},
+            "one_clock": rep["one_clock"],
+        }
+    pre = run_preset("priority_preemption", seed=seed)
+    hi = pre["hi_recovery_s"]
+    return {
+        "bench": "fleet",
+        "seed": seed,
+        "presets": presets,
+        "preemption": {
+            "hi_recovery_s": hi,
+            "gain": round(hi["no_preemption"] / max(hi["preemption"], 1e-9),
+                          3),
+            "recovers_faster": pre["preemption_recovers_faster"],
+        },
+        "nas_contention": nas_contention_micro(),
+    }
+
+
+def run(verbose: bool = True, json_path: str = None):
+    t0 = time.perf_counter()
+    payload = build_payload(seed=0)
+    wall = time.perf_counter() - t0
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    pre = payload["preemption"]
+    nas = payload["nas_contention"]
+    if verbose:
+        for name, p in sorted(payload["presets"].items()):
+            print(f"  {name:<24s} util={p['utilization']:.4f} "
+                  f"makespan={p['makespan_days']:.3f}d "
+                  f"claims={p['claims']['granted']}/"
+                  f"{p['claims']['granted'] + p['claims']['denied']}")
+        print(f"  preemption gain: {pre['gain']:.1f}x "
+              f"({pre['hi_recovery_s']['no_preemption']:.0f}s -> "
+              f"{pre['hi_recovery_s']['preemption']:.0f}s)")
+        print(f"  nas contention: {nas['solo_s']:.1f}s solo -> "
+              f"{nas['contended_s']:.1f}s contended "
+              f"({nas['slowdown']:.2f}x)")
+    return {
+        "name": "fleet_bench",
+        "us_per_call": wall / max(len(payload["presets"]) + 1, 1) * 1e6,
+        "derived": (f"preemption_gain={pre['gain']:.1f}x "
+                    f"nas_slowdown={nas['slowdown']:.2f}x "
+                    f"presets={len(payload['presets'])}"),
+        "checks": {
+            "preemption_recovers_faster": pre["recovers_faster"],
+            "preemption_gain_over_2x": pre["gain"] > 2.0,
+            "nas_slowdown_near_2x": 1.9 < nas["slowdown"] < 2.1,
+            "all_utilizations_positive": all(
+                p["utilization"] > 0 for p in payload["presets"].values()),
+            "one_clock_everywhere": all(
+                p["one_clock"] for p in payload["presets"].values()),
+        },
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH", default="BENCH_fleet.json",
+                    help="where to write the fleet artifact")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    rec = run(verbose=not args.quiet, json_path=args.json)
+    if not args.quiet:
+        print(rec)
+    failed = [k for k, v in rec["checks"].items() if not v]
+    raise SystemExit(1 if failed else 0)

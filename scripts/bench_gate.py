@@ -1,11 +1,17 @@
 #!/usr/bin/env python3
-"""CI bench-regression gate for the Fig. 6 policy sweep.
+"""CI bench-regression gate for the Fig. 6 policy sweep and the fleet bench.
 
-Compares a freshly emitted ``BENCH_fig6.json`` (``benchmarks/fig6_e2e.py
---json``) against the committed baseline and fails (exit 1) if the TRANSOM
-effective-training-time ratio regresses by more than the tolerance
-(default 5 %, relative) at any grid point, if the paper-point improvement
-over the manual baseline collapses, or if grid points disappeared.
+Compares a freshly emitted bench artifact against its committed baseline and
+fails (exit 1) on regression. The artifact kind is auto-detected:
+
+* ``BENCH_fig6.json`` (``benchmarks/fig6_e2e.py --json``): fails if the
+  TRANSOM effective-training-time ratio regresses by more than the tolerance
+  (default 5 %, relative) at any grid point, if the paper-point improvement
+  over the manual baseline collapses, or if grid points disappeared.
+* ``BENCH_fleet.json`` (``benchmarks/fleet_bench.py --json``): fails if any
+  fleet preset's utilization regresses past the tolerance, a preset
+  disappears, the preemption gain collapses, or the NAS processor-sharing
+  slowdown drifts off 2x for two equal flows.
 
 Usage:
 
@@ -19,9 +25,11 @@ import os
 import sys
 from typing import List, Tuple
 
-DEFAULT_BASELINE = os.path.join(
+_BASE_DIR = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "benchmarks", "baselines", "BENCH_fig6.json")
+    "benchmarks", "baselines")
+DEFAULT_BASELINE = os.path.join(_BASE_DIR, "BENCH_fig6.json")
+FLEET_BASELINE = os.path.join(_BASE_DIR, "BENCH_fleet.json")
 
 
 def _point_key(point: dict) -> Tuple:
@@ -54,29 +62,81 @@ def gate(fresh: dict, baseline: dict, tolerance: float = 0.05) -> List[str]:
     return fails
 
 
+def gate_fleet(fresh: dict, baseline: dict,
+               tolerance: float = 0.05) -> List[str]:
+    """Fleet-bench gate. Returns a list of failure messages (empty = pass)."""
+    fails: List[str] = []
+    fresh_presets = fresh.get("presets", {})
+    for name, bp in baseline["presets"].items():
+        np_ = fresh_presets.get(name)
+        if np_ is None:
+            fails.append(f"fleet preset {name!r} missing from fresh bench")
+            continue
+        old, new = bp["utilization"], np_["utilization"]
+        if new < old * (1.0 - tolerance):
+            fails.append(f"fleet utilization regressed in {name!r}: "
+                         f"{old:.4f} -> {new:.4f} (> {tolerance:.0%} drop)")
+    old_gain = baseline["preemption"]["gain"]
+    new_gain = fresh["preemption"]["gain"]
+    if not fresh["preemption"]["recovers_faster"]:
+        fails.append("preemption no longer recovers the high-priority job "
+                     "faster than the no-preemption baseline")
+    if new_gain < old_gain * (1.0 - tolerance):
+        fails.append(f"preemption gain collapsed: "
+                     f"{old_gain:.2f}x -> {new_gain:.2f}x")
+    slowdown = fresh["nas_contention"]["slowdown"]
+    if not 1.9 < slowdown < 2.1:
+        fails.append(f"NAS processor-sharing slowdown drifted off 2x for "
+                     f"two equal flows: {slowdown:.3f}x")
+    return fails
+
+
+def gate_any(fresh: dict, baseline: dict,
+             tolerance: float = 0.05) -> List[str]:
+    """Dispatch on artifact kind (the ``bench`` tag)."""
+    kind_f = fresh.get("bench")
+    kind_b = baseline.get("bench")
+    if kind_f != kind_b:
+        return [f"bench kind mismatch: fresh={kind_f!r} "
+                f"baseline={kind_b!r}"]
+    if kind_f == "fleet":
+        return gate_fleet(fresh, baseline, tolerance=tolerance)
+    return gate(fresh, baseline, tolerance=tolerance)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("fresh", help="freshly emitted BENCH_fig6.json")
-    ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE,
-                    help=f"committed baseline (default: {DEFAULT_BASELINE})")
+    ap.add_argument("fresh", help="freshly emitted BENCH_*.json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed baseline (default: picked by artifact "
+                         f"kind under {_BASE_DIR})")
     ap.add_argument("--tolerance", type=float, default=0.05,
                     help="max relative regression allowed (default 0.05)")
     args = ap.parse_args(argv)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
-    with open(args.baseline) as f:
+    baseline_path = args.baseline
+    if baseline_path is None:
+        baseline_path = (FLEET_BASELINE if fresh.get("bench") == "fleet"
+                         else DEFAULT_BASELINE)
+    with open(baseline_path) as f:
         baseline = json.load(f)
-    fails = gate(fresh, baseline, tolerance=args.tolerance)
+    fails = gate_any(fresh, baseline, tolerance=args.tolerance)
     if fails:
         print("BENCH GATE FAILED:", file=sys.stderr)
         for msg in fails:
             print(f"  - {msg}", file=sys.stderr)
         return 1
-    n = len(baseline["sweep"]["points"])
-    print(f"bench gate OK: {n} grid points within {args.tolerance:.0%} of "
-          f"baseline; paper-point improvement "
-          f"{fresh['paper_point']['improvement_pct']:.2f}%")
+    if fresh.get("bench") == "fleet":
+        print(f"bench gate OK: {len(baseline['presets'])} fleet presets "
+              f"within {args.tolerance:.0%} of baseline; preemption gain "
+              f"{fresh['preemption']['gain']:.1f}x")
+    else:
+        n = len(baseline["sweep"]["points"])
+        print(f"bench gate OK: {n} grid points within {args.tolerance:.0%} "
+              f"of baseline; paper-point improvement "
+              f"{fresh['paper_point']['improvement_pct']:.2f}%")
     return 0
 
 

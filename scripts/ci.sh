@@ -8,8 +8,8 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 TMP="$(mktemp -d)"
 trap 'rm -rf "$TMP"' EXIT
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== full test suite (tier-1 + slow long-horizon tests) =="
+python -m pytest -x -q -m "slow or not slow"
 
 echo "== determinism gate: scenario reports (two runs, same seed) =="
 python -m repro.sim.scenarios --run all --seed 0 --json "$TMP/scen_a.json" > /dev/null
@@ -23,13 +23,31 @@ python -m repro.sim.sweep --grid default --seed 0 --quiet --json "$TMP/sweep_b.j
 diff "$TMP/sweep_a.json" "$TMP/sweep_b.json" \
     || { echo "FAIL: policy sweep is nondeterministic" >&2; exit 1; }
 
+# the fleet presets also ran above via the scenario catalog; this gate
+# additionally covers the `python -m repro.fleet` CLI surface itself (the
+# byte-identical-report contract is on that exact command)
+echo "== determinism gate: fleet scenario reports (two runs, same seed) =="
+python -m repro.fleet --run all --seed 0 --json "$TMP/fleet_a.json" > /dev/null
+python -m repro.fleet --run all --seed 0 --json "$TMP/fleet_b.json" > /dev/null
+diff "$TMP/fleet_a.json" "$TMP/fleet_b.json" \
+    || { echo "FAIL: fleet scenario reports are nondeterministic" >&2; exit 1; }
+
 echo "== bench regression gate: Fig. 6 sweep vs committed baseline =="
 python benchmarks/fig6_e2e.py --quiet --json "$TMP/BENCH_fig6.json"
 python scripts/bench_gate.py "$TMP/BENCH_fig6.json"
 
-# every scenario (incl. weeklong_soak / policy_frontier) already ran twice
-# in the determinism gate; just confirm the catalog CLI renders
+echo "== bench regression gate: fleet bench vs committed baseline =="
+python benchmarks/fleet_bench.py --quiet --json "$TMP/BENCH_fleet.json"
+python benchmarks/fleet_bench.py --quiet --json "$TMP/BENCH_fleet_b.json"
+diff "$TMP/BENCH_fleet.json" "$TMP/BENCH_fleet_b.json" \
+    || { echo "FAIL: fleet bench is nondeterministic" >&2; exit 1; }
+python scripts/bench_gate.py "$TMP/BENCH_fleet.json"
+
+# every scenario (incl. weeklong_soak / policy_frontier and the fleet
+# presets) already ran twice in the determinism gates; just confirm the
+# catalog CLIs render
 echo "== scenario catalog =="
 python -m repro.sim.scenarios --list
+python -m repro.fleet --list
 
 echo "CI OK"

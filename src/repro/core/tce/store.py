@@ -25,6 +25,103 @@ from .sharding import NodeShards, ShardSpec
 NAS_BW_PER_RANK = 71.1e6  # bytes/s — paper §IV-C: "roughly 71.1MB/s per rank"
 
 
+class SharedBandwidth:
+    """Processor-sharing model of one shared NAS uplink.
+
+    ``k`` concurrent flows each progress at ``bw_total / k``: one job's
+    restore waterfall visibly slows another job's async checkpoint save.
+    Flows are tracked in *modelled* time supplied by the caller — start a
+    flow with :meth:`start`, then either drain completions event-style
+    (:meth:`next_completion` / :meth:`take_completed`, the fleet engine's
+    path) or charge a blocking transfer (:meth:`transfer`, the
+    :class:`NASStore` path).
+    """
+
+    def __init__(self, bw_total: float):
+        if bw_total <= 0:
+            raise ValueError("bw_total must be > 0")
+        self.bw = float(bw_total)
+        # completion slack: remaining work finishable in < 1 ns at full
+        # bandwidth counts as done (float residue from share arithmetic
+        # must not stall the virtual clock)
+        self._eps = self.bw * 1e-9
+        self._t = 0.0                       # internal virtual time
+        self._next_id = 0
+        self._flows: Dict[int, List] = {}   # id -> [remaining_bytes, label]
+        self._done: List[tuple] = []        # (t_done, id, label)
+        self.stats = {"flows": 0, "bytes": 0, "contended_flows": 0,
+                      "peak_concurrency": 0}
+
+    # -- flow lifecycle -------------------------------------------------- #
+    def active(self) -> int:
+        return len(self._flows)
+
+    def start(self, t: float, nbytes: float, label: str = "flow") -> int:
+        """Register a flow of ``nbytes`` starting at modelled time ``t``."""
+        self._drain(t)
+        fid = self._next_id
+        self._next_id += 1
+        self._flows[fid] = [float(max(nbytes, 1.0)), label]
+        self.stats["flows"] += 1
+        self.stats["bytes"] += int(nbytes)
+        if len(self._flows) > 1:
+            self.stats["contended_flows"] += 1
+        self.stats["peak_concurrency"] = max(self.stats["peak_concurrency"],
+                                             len(self._flows))
+        return fid
+
+    def cancel(self, fid: int) -> None:
+        """Abort a flow (a crash tears down an in-flight save)."""
+        self._flows.pop(fid, None)
+
+    def next_completion(self) -> Optional[float]:
+        """Earliest flow-completion time, assuming no new arrivals (shares
+        only grow after a completion, so the *first* finisher's share is
+        exactly ``bw / k`` throughout)."""
+        if not self._flows:
+            return None
+        k = len(self._flows)
+        return self._t + min(r for r, _ in self._flows.values()) * k / self.bw
+
+    def take_completed(self, t: float) -> List[tuple]:
+        """Advance to ``t`` and return ``(t_done, flow_id, label)`` for every
+        flow that finished, in completion order."""
+        self._drain(t)
+        out, self._done = self._done, []
+        return out
+
+    def transfer(self, t: float, nbytes: float, label: str = "io") -> float:
+        """Blocking charge: start a flow at ``t`` and run it to completion
+        (no further arrivals assumed). Returns the modelled duration — with
+        no other active flow this degenerates to ``nbytes / bw``."""
+        fid = self.start(t, nbytes, label)
+        while fid in self._flows:
+            self._drain(self.next_completion())
+        for i in range(len(self._done) - 1, -1, -1):
+            if self._done[i][1] == fid:
+                return self._done.pop(i)[0] - t
+        raise AssertionError(f"flow {fid} vanished without completing")
+
+    # -- internals -------------------------------------------------------- #
+    def _drain(self, t: float) -> None:
+        """Advance virtual time to ``t``, progressing every active flow at
+        its fair share and logging completions as shares grow."""
+        t = max(t, self._t)
+        while self._flows and self._t < t:
+            k = len(self._flows)
+            share = self.bw / k
+            dt_next = min(r for r, _ in self._flows.values()) / share
+            step = min(dt_next, t - self._t)
+            for f in self._flows.values():
+                f[0] -= share * step
+            self._t += step
+            for fid in sorted(f for f, v in self._flows.items()
+                              if v[0] <= self._eps):
+                _, label = self._flows.pop(fid)
+                self._done.append((self._t, fid, label))
+        self._t = t
+
+
 class DiskStore:
     """step -> {rank -> NodeShards}; manifest written last, atomically."""
 
@@ -110,21 +207,37 @@ class DiskStore:
 
 
 class NASStore(DiskStore):
-    """DiskStore + modelled NAS bandwidth per rank (paper's baseline medium)."""
+    """DiskStore + modelled NAS bandwidth per rank (paper's baseline medium).
+
+    With an ``arbiter`` (:class:`SharedBandwidth`) the store's transfers are
+    charged at their *contended* fair share — concurrent modelled flows from
+    other jobs on the same NAS slow this store's saves and restores down.
+    Without one, each transfer gets the full per-rank bandwidth (the
+    historical single-job behaviour).
+    """
 
     def __init__(self, root: str, bw_per_rank: float = NAS_BW_PER_RANK,
-                 clock: Optional[SimClock] = None):
+                 clock: Optional[SimClock] = None,
+                 arbiter: Optional[SharedBandwidth] = None):
         super().__init__(root)
         self.bw = bw_per_rank
         self.clock = clock or SimClock()
+        self.arbiter = arbiter
+
+    def _charge(self, nbytes: int, label: str) -> None:
+        if self.arbiter is not None:
+            self.clock.advance(
+                self.arbiter.transfer(self.clock.seconds, nbytes, label))
+        else:
+            self.clock.advance(nbytes / self.bw)
 
     def write_rank(self, step: int, rank: int, shards: NodeShards) -> int:
         nbytes = super().write_rank(step, rank, shards)
-        self.clock.advance(nbytes / self.bw)
+        self._charge(nbytes, f"save_r{rank}")
         return nbytes
 
     def read_rank(self, step: int, rank: int, verify: bool = True) -> NodeShards:
         out = super().read_rank(step, rank, verify)
         nbytes = sum(d.nbytes for _, d in out.values())
-        self.clock.advance(nbytes / self.bw)
+        self._charge(nbytes, f"restore_r{rank}")
         return out

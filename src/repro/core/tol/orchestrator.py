@@ -102,7 +102,8 @@ class JobReport:
 class TransomOperator:
     def __init__(self, server: TransomServer, cluster: ClusterSim,
                  tce: TCEngine, tee: Optional[TEEService] = None,
-                 clock: Optional[SimClock] = None, verbose: bool = False):
+                 clock: Optional[SimClock] = None, verbose: bool = False,
+                 job_id: Optional[str] = None):
         self.server = server
         self.cluster = cluster
         self.tce = tce
@@ -111,6 +112,12 @@ class TransomOperator:
         # (which in turn adopted the fabric's / topology's / store's)
         self.clock = clock or tce.clock
         self.verbose = verbose
+        # claimant identity in the shared-topology lease ledger: per-job
+        # operators on one fleet topology (repro.fleet.JobView) arbitrate
+        # replacement claims under this name and can never be handed a node
+        # already leased to a concurrent job
+        self.job_id = (job_id or getattr(cluster, "job_id", None)
+                       or getattr(cluster, "DEFAULT_CLAIMANT", "job0"))
         self.launchers: List[Launcher] = []
         self.fsm = LauncherFSM()
 
@@ -233,7 +240,8 @@ class TransomOperator:
                     if l.node in bad_nodes:
                         new = self.cluster.schedule_replacement(
                             self.server.bad_nodes(),
-                            avoid_domains=avoid_domains)
+                            avoid_domains=avoid_domains,
+                            claimant=self.job_id)
                         if new is None:
                             replaced = False
                             break
@@ -342,7 +350,8 @@ class TransomOperator:
         complete). Returns how many nodes were actually added."""
         added: List[Launcher] = []
         for _ in range(n_new):
-            new = self.cluster.schedule_replacement(self.server.bad_nodes())
+            new = self.cluster.schedule_replacement(self.server.bad_nodes(),
+                                                    claimant=self.job_id)
             if new is None:
                 break
             added.append(Launcher(len(self.launchers) + len(added), new))
@@ -363,4 +372,5 @@ class TransomOperator:
             for n in bad:
                 self.server.report_bad_node(n)
                 self.cluster.evict(n, self.clock.seconds)
-                self.cluster.schedule_replacement(self.server.bad_nodes())
+                self.cluster.schedule_replacement(self.server.bad_nodes(),
+                                                  claimant=self.job_id)

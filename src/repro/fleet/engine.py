@@ -1,0 +1,594 @@
+"""Fleet engine: N concurrent training jobs on ONE shared substrate.
+
+Every run builds exactly one :class:`~repro.sim.clock.SimClock`, one
+:class:`~repro.sim.topology.Topology` and one fault
+:class:`~repro.sim.clock.EventQueue`; N modelled training jobs (the soak
+engine's cost model, per job) advance on that single timeline:
+
+* the :class:`~repro.fleet.scheduler.FleetScheduler` gang-schedules jobs,
+  queues the ones that don't fit, and arbitrates every replacement claim
+  through the topology's lease ledger — two recovering jobs can never be
+  handed the same spare;
+* a low-priority job can be **preempted**: elastically shrunk by one machine
+  to unblock a high-priority job's recovery when the shared pool is dry
+  (the donor pays a reshard — rollback to its last durable checkpoint and a
+  restore through the store);
+* checkpoint saves and store restores are **flows on one shared NAS**
+  (:class:`~repro.core.tce.store.SharedBandwidth`, processor sharing): one
+  job's restore waterfall visibly slows another job's async save, and a
+  save that hasn't drained when a crash lands is torn (not durable);
+* correlated faults carry their failure-domain tag, so a rack/switch outage
+  hits every co-located job in the same event (reported per ``(t, domain)``
+  group) and replacements avoid the failed domain.
+
+The run is fully seeded and emits a deterministic JSON-able report with
+per-job recovery/goodput sections and fleet-level utilization.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.tce.store import NAS_BW_PER_RANK, SharedBandwidth
+from repro.sim.clock import EventQueue, SimClock
+from repro.sim.faults import (FaultEvent, FaultInjector, cascade_events,
+                              domain_outage_schedule, merge_schedules,
+                              push_schedule)
+from repro.sim.soak import DAY_S, NODE_ATTRIBUTABLE, SoakPolicy
+from repro.sim.topology import NodeState, Topology
+
+from .scheduler import FleetScheduler, JobSpec
+
+_EPS = 1e-6
+
+# job lifecycle states; DETECT/RESCHEDULE/RESTORE/WARMUP are the phases of
+# one open recovery transaction
+PENDING, RUNNING, STALLED = "pending", "running", "stalled"
+DETECT, RESCHEDULE, RESTORE, WARMUP = ("detect", "reschedule", "restore",
+                                       "warmup")
+WAITING, DONE = "waiting", "done"
+_RECOVERY = frozenset({DETECT, RESCHEDULE, RESTORE, WARMUP, WAITING})
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """One fleet run: a shared cluster, N job specs, a fault environment."""
+    jobs: Tuple[JobSpec, ...]
+    n_nodes: int = 16
+    n_spares: int = 4
+    nodes_per_rack: int = 8
+    racks_per_switch: int = 4
+    repair_hours: float = 4.0
+    # one shared NAS uplink (paper §IV-C per-rank bandwidth x a few ranks):
+    # an 8 GB checkpoint drains in ~28 s solo, ~56 s with one contender
+    nas_bw_total: float = 4 * NAS_BW_PER_RANK
+    preemption: bool = True
+    # stochastic fault environment (0 disables each source)
+    mtbf_node_days: float = 0.0
+    straggler_frac: float = 0.15
+    p_cascade: float = 0.0
+    cascade_window_s: float = 600.0
+    rack_mtbf_days: float = 0.0
+    horizon_days: float = 30.0
+    scripted: Tuple[FaultEvent, ...] = ()        # deterministic extra events
+    seed: int = 0
+
+
+class _Job:
+    """Runtime state of one job (spec + progress + open-recovery fields)."""
+
+    def __init__(self, spec: JobSpec):
+        self.spec = spec
+        self.pol: SoakPolicy = spec.policy
+        self.state = PENDING
+        self.until = math.inf            # end of the current timed phase
+        self.need = spec.ideal_hours * 3600.0
+        self.done = 0.0                  # productive seconds banked
+        self.last_ckpt = 0.0             # durable checkpoint (productive s)
+        self.next_ckpt = spec.ckpt_interval_s
+        self.save_flow: Optional[Tuple[int, float]] = None   # (fid, snapshot)
+        self.restore_flow: Optional[int] = None
+        # open recovery transaction
+        self.inplace = False
+        self.escalate = False
+        self.recovery_t0 = 0.0
+        self.pending_replace = 0
+        self.wait_start = 0.0
+        self.wait_s_in_open = 0.0
+        self.restore_src = "cache"
+        self.victim_racks: List[str] = []
+        # lifetime stats
+        self.admitted_at = math.inf
+        self.finished_at = math.inf
+        self.final_nodes = 0
+        self.lost_s = 0.0
+        self.restart_times: List[float] = []
+        self.downtime_s = 0.0
+        self.restore_sources: Dict[str, int] = {}
+        self.counts = dict(faults_hit=0, absorbed=0, domain_hits=0,
+                           shrinks=0, donations_given=0, donations_taken=0,
+                           waits=0, saves_started=0, saves_durable=0,
+                           saves_torn=0, saves_skipped=0)
+        self.wait_s = 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.state not in (PENDING, DONE)
+
+    def rate(self, view) -> float:
+        return len(view.assigned) / self.spec.n_nodes
+
+
+class _FleetRun:
+    def __init__(self, cfg: FleetConfig, seed: int):
+        self.cfg = cfg
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.clock = SimClock()
+        self.topo = Topology(cfg.n_nodes, n_spares=cfg.n_spares,
+                             repair_hours=cfg.repair_hours,
+                             nodes_per_rack=cfg.nodes_per_rack,
+                             racks_per_switch=cfg.racks_per_switch,
+                             clock=self.clock, auto_assign=False)
+        self.sched = FleetScheduler(self.topo)
+        self.nas = SharedBandwidth(cfg.nas_bw_total)
+        self.events = EventQueue(self.clock)
+        self.jobs: Dict[str, _Job] = {}
+        self.specs: Dict[str, JobSpec] = {}
+        for spec in cfg.jobs:
+            if spec.n_nodes > cfg.n_nodes:
+                raise ValueError(f"{spec.name}: wants {spec.n_nodes} nodes, "
+                                 f"fleet has {cfg.n_nodes}")
+            self.specs[spec.name] = spec
+            self.jobs[spec.name] = _Job(spec)
+            if spec.submit_at_s > 0:
+                self.events.push(spec.submit_at_s, ("submit", spec.name))
+        schedule: List[FaultEvent] = list(cfg.scripted)
+        if cfg.mtbf_node_days > 0:
+            primary = FaultInjector(
+                cfg.n_nodes, cfg.mtbf_node_days,
+                horizon_days=cfg.horizon_days,
+                straggler_frac=cfg.straggler_frac, seed=seed).schedule()
+            if cfg.p_cascade > 0:
+                primary = cascade_events(
+                    primary, list(self.topo.nodes), p_cascade=cfg.p_cascade,
+                    recovery_window_s=cfg.cascade_window_s, seed=seed + 1)
+            schedule = merge_schedules(schedule, primary)
+        if cfg.rack_mtbf_days > 0:
+            schedule = merge_schedules(schedule, domain_outage_schedule(
+                self.topo, "rack", cfg.rack_mtbf_days, cfg.horizon_days,
+                seed=seed + 2))
+        self.n_injected = push_schedule(self.events, schedule)
+        self.counts = dict(idle_faults=0, job_faults=0, preemptions=0)
+        # (t, domain) -> set of job names hit by that correlated event
+        self.correlated: Dict[Tuple[float, str], Set[str]] = {}
+
+    # ------------------------------------------------------------------ #
+    def _view(self, job: _Job):
+        return self.sched.views[job.spec.name]
+
+    def _detect_s(self, pol: SoakPolicy) -> float:
+        if pol.weekend_frac > 0 and self.rng.random() < pol.weekend_frac:
+            return pol.weekend_detect_s
+        return float(self.rng.exponential(pol.detect_mean_s))
+
+    def _next_repair(self) -> Optional[float]:
+        due = [n.repair_at for n in self.topo.nodes.values()
+               if n.state in (NodeState.FAILED, NodeState.CORDONED)]
+        if not due:
+            return None
+        return max(min(due), self.clock.seconds + 1.0)
+
+    def _try_admit(self, t: float) -> None:
+        self.sched.try_admit()
+        for name in self.sched.views:
+            job = self.jobs[name]
+            if job.state == PENDING:
+                job.state = RUNNING
+                job.admitted_at = t
+                job.next_ckpt = job.spec.ckpt_interval_s
+
+    # -- recovery transaction ------------------------------------------- #
+    def _open_recovery(self, job: _Job, t: float, victims: List[str],
+                       inplace: bool) -> None:
+        if job.save_flow is not None:
+            # the crash tears the in-flight save: it never becomes durable
+            self.nas.cancel(job.save_flow[0])
+            job.save_flow = None
+            job.counts["saves_torn"] += 1
+        job.state = DETECT
+        job.inplace = inplace
+        job.escalate = False
+        job.recovery_t0 = t
+        job.pending_replace = 0
+        job.wait_s_in_open = 0.0
+        job.victim_racks = []
+        job.until = t + self._detect_s(job.pol) + job.pol.error_check_s
+        self._evict_and_note(job, t, victims)
+
+    def _evict_and_note(self, job: _Job, t: float,
+                        victims: List[str]) -> None:
+        view = self._view(job)
+        for v in victims:
+            job.victim_racks.append(self.topo.domain_of(v))
+            view.evict(v, t)
+            job.pending_replace += 1
+
+    def _avoid_domains(self, job: _Job) -> Set[str]:
+        # 2+ victims in one rack point at a correlated root cause: keep
+        # replacements out of that failure domain (domain-tagged events
+        # already recorded each victim's rack here too)
+        hits: Dict[str, int] = {}
+        for r in job.victim_racks:
+            hits[r] = hits.get(r, 0) + 1
+        return {r for r, c in hits.items() if c >= 2}
+
+    def _claim_replacements(self, job: _Job, t: float,
+                            retrying: bool = False) -> None:
+        """Fill this recovery's open slots down the escalation ladder:
+        shared-pool claims first, then preemption of a lower-priority job,
+        then elastic shrink, else wait for repairs. Leaves the job in
+        RESCHEDULE or WAITING. ``retrying`` marks a re-attempt from the
+        WAITING state (wait bookkeeping continues instead of restarting)."""
+        spec, view = job.spec, self._view(job)
+        avoid = self._avoid_domains(job)
+        while job.pending_replace > 0:
+            got = self.sched.claim_replacement(spec.name, set(), avoid)
+            if got is not None:
+                job.pending_replace -= 1
+                continue
+            donor = None
+            if self.cfg.preemption:
+                donatable = {n for n, j in self.jobs.items()
+                             if j.state in (RUNNING, STALLED)}
+                donor = self.sched.find_donor(spec, self.specs, donatable)
+            if donor is not None:
+                self.sched.donate(donor, spec.name)
+                self._preempt_donor(self.jobs[donor], t)
+                job.counts["donations_taken"] += 1
+                self.counts["preemptions"] += 1
+                job.pending_replace -= 1
+                continue
+            if len(view.assigned) >= spec.min_nodes:
+                # run shrunk: the survivors reshard from the store
+                job.counts["shrinks"] += 1
+                job.escalate = True
+                job.pending_replace = 0
+                break
+            # below the elastic floor and the pool is dry: stall the
+            # recovery until repairs land (or a donor frees up)
+            job.state = WAITING
+            job.until = math.inf
+            if not retrying:
+                job.wait_start = t
+                job.counts["waits"] += 1
+            return
+        if retrying:
+            job.wait_s += t - job.wait_start
+            job.wait_s_in_open += t - job.wait_start
+        job.state = RESCHEDULE
+        job.until = t + job.pol.evict_reschedule_s
+
+    def _preempt_donor(self, donor: _Job, t: float) -> None:
+        """The donor lost a machine to a higher-priority job: roll back to
+        its last durable checkpoint and reshard through the store."""
+        if donor.save_flow is not None:
+            self.nas.cancel(donor.save_flow[0])
+            donor.save_flow = None
+            donor.counts["saves_torn"] += 1
+        donor.counts["donations_given"] += 1
+        donor.state = RESCHEDULE            # planned: no detect phase
+        donor.inplace = False
+        donor.escalate = True               # reshard == store restore
+        donor.recovery_t0 = t
+        donor.pending_replace = 0
+        donor.wait_s_in_open = 0.0
+        donor.victim_racks = []
+        donor.until = t + donor.pol.evict_reschedule_s
+
+    def _start_restore(self, job: _Job, t: float) -> None:
+        job.state = RESTORE
+        pol = job.pol
+        if job.escalate or not pol.has_ring_backup:
+            # reshard / double-fault / no-ring-backup policy: the restore
+            # pulls the full checkpoint through the shared NAS (a flow that
+            # contends with every other job's saves and restores)
+            job.restore_src = "store_full"
+            job.until = math.inf        # ends when the NAS flow drains
+            job.restore_flow = self.nas.start(
+                t, job.spec.ckpt_bytes, f"{job.spec.name}:restore")
+        elif job.inplace:
+            job.restore_src = "cache"
+            job.until = t + pol.inplace_restart_s + pol.restore_cache_s
+        else:
+            job.restore_src = "backup"
+            job.until = t + pol.restore_backup_s
+
+    def _close_recovery(self, job: _Job, t: float) -> None:
+        view = self._view(job)
+        src = job.restore_src
+        job.restore_sources[src] = job.restore_sources.get(src, 0) + 1
+        job.lost_s += job.done - job.last_ckpt
+        job.done = job.last_ckpt
+        job.next_ckpt = job.done + job.spec.ckpt_interval_s
+        view.rebind_ranks(list(view.assigned))
+        job.restart_times.append(t - job.recovery_t0 - job.wait_s_in_open)
+        job.downtime_s += t - job.recovery_t0
+        job.state = RUNNING
+        job.until = math.inf
+
+    # -- fault dispatch -------------------------------------------------- #
+    def _handle_fault(self, t: float, ev: FaultEvent) -> None:
+        node = self.topo.nodes.get(ev.node)
+        owner = self.topo.owner_of(ev.node)
+        if node is None or owner is None or owner not in self.jobs \
+                or node.state not in (NodeState.HEALTHY, NodeState.DEGRADED):
+            self.counts["idle_faults"] += 1
+            return
+        job = self.jobs[owner]
+        if not job.active:
+            self.counts["idle_faults"] += 1
+            return
+        attributable = (ev.degrades_only or ev.domain is not None
+                        or ev.category in NODE_ATTRIBUTABLE)
+        if attributable:
+            node.state = (NodeState.DEGRADED if ev.degrades_only
+                          else NodeState.FAILED)
+            node.fail_category = ev.category
+            node.repair_at = t + self.topo.repair_s
+        if ev.domain is not None:
+            job.counts["domain_hits"] += 1
+            self.correlated.setdefault((t, ev.domain), set()).add(owner)
+        victims = [ev.node] if attributable else []
+        if job.state in (RUNNING, STALLED):
+            self.counts["job_faults"] += 1
+            job.counts["faults_hit"] += 1
+            self._open_recovery(job, t, victims, inplace=not attributable)
+        else:                                   # lands in an open recovery
+            job.counts["absorbed"] += 1
+            if not attributable:
+                return
+            self._evict_and_note(job, t, victims)
+            job.escalate = True                 # double fault -> store path
+            if job.state == DETECT:
+                return                          # handled when checks finish
+            if job.state == RESTORE and job.restore_flow is not None:
+                self.nas.cancel(job.restore_flow)
+                job.restore_flow = None
+            if job.state == WAITING:
+                return                          # retried on the next repair
+            self._claim_replacements(job, t)
+
+    # -- timed-phase transitions ----------------------------------------- #
+    def _advance_phase(self, job: _Job, t: float) -> None:
+        if job.state == STALLED:
+            job.state = RUNNING
+            job.until = math.inf
+        elif job.state == DETECT:
+            if job.inplace:
+                self._start_restore(job, t)   # no eviction: restart in place
+            else:
+                self._claim_replacements(job, t)
+        elif job.state == RESCHEDULE:
+            self._start_restore(job, t)
+        elif job.state == RESTORE:          # fixed-cost restore finished
+            job.state = WARMUP
+            job.until = t + job.pol.warmup_s
+        elif job.state == WARMUP:
+            self._close_recovery(job, t)
+
+    def _retry_waiting(self, job: _Job, t: float) -> None:
+        """Re-run the whole escalation ladder for a stalled recovery: a
+        repaired machine, a freed spare or a donor back in RUNNING state can
+        all unblock it (the preemption rung stays live while waiting)."""
+        self._claim_replacements(job, t, retrying=True)
+
+    # -- progress markers -------------------------------------------------- #
+    def _marker(self, job: _Job) -> float:
+        return min(job.next_ckpt, job.need)
+
+    def _at_marker(self, job: _Job, t: float) -> None:
+        spec = job.spec
+        if job.done >= job.need - _EPS:
+            job.state = DONE
+            job.finished_at = t
+            job.final_nodes = len(self._view(job).assigned)
+            job.until = math.inf
+            if job.save_flow is not None:
+                self.nas.cancel(job.save_flow[0])
+                job.save_flow = None
+            self.sched.complete(spec.name)
+            self._try_admit(t)
+            return
+        if job.done >= job.next_ckpt - _EPS:
+            if job.save_flow is not None:
+                # previous async save still draining (NAS contention):
+                # skip this cadence tick rather than stacking flows
+                job.counts["saves_skipped"] += 1
+                job.next_ckpt = job.done + spec.ckpt_interval_s
+                return
+            job.counts["saves_started"] += 1
+            job.save_flow = (self.nas.start(t, spec.ckpt_bytes,
+                                            f"{spec.name}:save"), job.done)
+            job.next_ckpt = job.done + spec.ckpt_interval_s
+            job.state = STALLED
+            job.until = t + job.pol.ckpt_save_stall_s
+
+    # -- NAS flow completions --------------------------------------------- #
+    def _nas_completions(self, t: float) -> None:
+        for t_done, fid, _label in self.nas.take_completed(t):
+            for job in self.jobs.values():
+                if job.save_flow is not None and job.save_flow[0] == fid:
+                    job.last_ckpt = job.save_flow[1]
+                    job.save_flow = None
+                    job.counts["saves_durable"] += 1
+                    break
+                if job.restore_flow == fid:
+                    job.restore_flow = None
+                    job.state = WARMUP
+                    job.until = t_done + job.pol.warmup_s
+                    break
+
+    # -- main loop --------------------------------------------------------- #
+    def run(self) -> dict:
+        for spec in self.cfg.jobs:
+            if spec.submit_at_s <= 0:
+                self.sched.submit(spec)
+        self._try_admit(0.0)
+        guard = 0
+        while any(j.state != DONE for j in self.jobs.values()):
+            guard += 1
+            if guard > 5_000_000:
+                raise RuntimeError("fleet loop did not converge")
+            t_now = self.clock.seconds
+            cands: List[float] = []
+            if self.events:
+                cands.append(self.events.peek_time())
+            nc = self.nas.next_completion()
+            if nc is not None:
+                cands.append(nc)
+            waiting_or_pending = any(j.state in (PENDING, WAITING)
+                                     for j in self.jobs.values())
+            for job in self.jobs.values():
+                if job.state == RUNNING:
+                    r = job.rate(self._view(job))
+                    if r > 0:
+                        cands.append(
+                            t_now + max(self._marker(job) - job.done, 0.0) / r)
+                    else:
+                        waiting_or_pending = True
+                elif job.until < math.inf:
+                    cands.append(job.until)
+            if waiting_or_pending:
+                nr = self._next_repair()
+                if nr is not None:
+                    cands.append(nr)
+            if not cands:
+                raise RuntimeError(
+                    "fleet deadlock: no runnable job, no pending event "
+                    f"(states: {[j.state for j in self.jobs.values()]})")
+            t_next = max(min(cands), t_now)
+            # bank productive progress for every running job
+            dt = t_next - t_now
+            for job in self.jobs.values():
+                if job.state == RUNNING:
+                    job.done += dt * job.rate(self._view(job))
+            self.clock.advance_to(t_next)
+            self._process(t_next)
+        return self._report()
+
+    def _process(self, t: float) -> None:
+        self._nas_completions(t)
+        self.topo.repair_due(t)
+        for job in self.jobs.values():
+            if job.until <= t + _EPS and job.state not in (PENDING, RUNNING,
+                                                           WAITING, DONE):
+                self._advance_phase(job, t)
+        for job in self.jobs.values():
+            if job.state == WAITING:
+                self._retry_waiting(job, t)
+        for job in self.jobs.values():
+            if job.state == RUNNING and job.done >= self._marker(job) - _EPS:
+                self._at_marker(job, t)
+        for _t_ev, payload in self.events.pop_due(t):
+            if isinstance(payload, FaultEvent):
+                self._handle_fault(t, payload)
+            elif isinstance(payload, tuple) and payload[0] == "submit":
+                self.sched.submit(self.specs[payload[1]])
+        self._try_admit(t)
+
+    # -- report ------------------------------------------------------------ #
+    def _job_report(self, job: _Job) -> dict:
+        spec = job.spec
+        wall = max(job.finished_at - job.admitted_at, _EPS)
+        return {
+            "priority": spec.priority,
+            "n_nodes": spec.n_nodes,
+            "min_nodes": spec.min_nodes,
+            "policy": job.pol.name,
+            "submitted_at_s": round(spec.submit_at_s, 3),
+            "admitted_at_s": round(job.admitted_at, 3),
+            "finished_at_s": round(job.finished_at, 3),
+            "queue_wait_s": round(job.admitted_at - spec.submit_at_s, 3),
+            "end_to_end_days": round(wall / DAY_S, 6),
+            "effective_time_ratio": round(job.need / wall, 4),
+            "lost_steps": int(round(job.lost_s / spec.step_time_s)),
+            "final_nodes": job.final_nodes,
+            "recovery": {
+                "restarts": len(job.restart_times),
+                "mean_restart_s": round(float(np.mean(job.restart_times)), 1)
+                if job.restart_times else 0.0,
+                "total_downtime_s": round(job.downtime_s, 1),
+                "waits_for_repair": job.counts["waits"],
+                "repair_wait_s": round(job.wait_s, 1),
+            },
+            "restore_sources": dict(sorted(job.restore_sources.items())),
+            "saves": {k.split("_", 1)[1]: v for k, v in job.counts.items()
+                      if k.startswith("saves_")},
+            "faults": {"hit": job.counts["faults_hit"],
+                       "absorbed_in_recovery": job.counts["absorbed"],
+                       "domain_hits": job.counts["domain_hits"]},
+            "preemption": {"donations_given": job.counts["donations_given"],
+                           "donations_taken": job.counts["donations_taken"]},
+            "shrinks": job.counts["shrinks"],
+        }
+
+    def _report(self) -> dict:
+        cfg = self.cfg
+        elapsed = max(self.clock.seconds, _EPS)
+        goodput_node_s = sum(j.need * j.spec.n_nodes
+                             for j in self.jobs.values())
+        correlated = [
+            {"t": round(t, 3), "domain": dom, "jobs": sorted(names)}
+            for (t, dom), names in sorted(self.correlated.items())]
+        return {
+            "engine": "fleet",
+            "seed": self.seed,
+            "config": {
+                "n_nodes": cfg.n_nodes,
+                "n_spares": cfg.n_spares,
+                "nodes_per_rack": cfg.nodes_per_rack,
+                "repair_hours": cfg.repair_hours,
+                "nas_bw_total": cfg.nas_bw_total,
+                "preemption": cfg.preemption,
+                "mtbf_node_days": cfg.mtbf_node_days,
+                "rack_mtbf_days": cfg.rack_mtbf_days,
+                "n_jobs": len(cfg.jobs),
+            },
+            "makespan_days": round(elapsed / DAY_S, 6),
+            "fleet": {
+                "utilization": round(goodput_node_s
+                                     / (cfg.n_nodes * elapsed), 4),
+                "goodput_node_days": round(goodput_node_s / DAY_S, 4),
+                "preemptions": self.counts["preemptions"],
+                "scheduler": dict(self.sched.stats),
+                "nas": {"bw_total": cfg.nas_bw_total,
+                        **dict(self.nas.stats)},
+            },
+            "faults": {
+                "injected": self.n_injected,
+                "hit_jobs": self.counts["job_faults"],
+                "idle": self.counts["idle_faults"],
+                "unfired_at_completion": len(self.events),
+            },
+            "correlated_events": correlated,
+            "jobs": {name: self._job_report(j)
+                     for name, j in sorted(self.jobs.items())},
+            "one_clock": (self.topo.clock is self.clock
+                          and self.events.clock is self.clock),
+        }
+
+
+def run_fleet(cfg: FleetConfig, seed: Optional[int] = None) -> dict:
+    """Run one multi-job fleet simulation; returns its deterministic JSON
+    report. ``seed`` overrides ``cfg.seed``."""
+    return _FleetRun(cfg, cfg.seed if seed is None else seed).run()
+
+
+def no_preemption(cfg: FleetConfig) -> FleetConfig:
+    """The identical fleet (same jobs, same fault timeline) with preemption
+    disabled — the baseline the priority_preemption preset compares against."""
+    return replace(cfg, preemption=False)

@@ -1,0 +1,165 @@
+"""Named fleet scenarios: multi-job presets over the fleet engine.
+
+Each preset is a seeded, deterministic configuration of
+:class:`~repro.fleet.engine.FleetConfig`; reports are byte-identical across
+runs at the same seed (enforced in CI). They are also registered into the
+``repro.sim.scenarios`` catalog, so ``python -m repro.sim.scenarios --list``
+shows the whole fleet alongside the single-job scenarios.
+
+    python -m repro.fleet --list
+    python -m repro.fleet --run two_jobs_rack_outage --seed 0
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+from repro.sim.faults import FaultEvent
+from repro.sim.soak import manual_policy, transom_policy
+
+from .engine import FleetConfig, no_preemption, run_fleet
+from .scheduler import JobSpec
+
+
+@dataclass(frozen=True)
+class FleetPreset:
+    name: str
+    description: str
+    run: Callable[[int], dict]     # seed -> JSON-able report
+
+
+PRESETS: Dict[str, FleetPreset] = {}
+
+
+def preset(name: str, description: str):
+    def deco(fn: Callable[[int], dict]) -> Callable[[int], dict]:
+        PRESETS[name] = FleetPreset(name, description, fn)
+        return fn
+    return deco
+
+
+def _job(name: str, n_nodes: int = 4, **kw) -> JobSpec:
+    kw.setdefault("ideal_hours", 6.0)
+    kw.setdefault("policy", transom_policy())
+    return JobSpec(name, n_nodes, **kw)
+
+
+# --------------------------------------------------------------------------- #
+@preset("two_jobs_rack_outage",
+        "Two jobs co-located on one rack; the rack dies at t=2h in ONE "
+        "correlated event hitting both jobs, whose store restores then "
+        "contend for the shared NAS uplink.")
+def two_jobs_rack_outage(seed: int = 0) -> dict:
+    # nodes_per_rack=8 -> rack00 = node0000..0007 hosts both 4-node jobs;
+    # the 8 spares live in later racks, outside the failed domain
+    outage = [FaultEvent(2 * 3600.0, f"node{i:04d}", "network",
+                         degrades_only=False, domain="rack00")
+              for i in range(8)]
+    cfg = FleetConfig(
+        jobs=(_job("jobA"), _job("jobB")),
+        n_nodes=8, n_spares=8, nodes_per_rack=8,
+        scripted=tuple(outage), seed=seed)
+    rep = run_fleet(cfg, seed=seed)
+    hit = [e for e in rep["correlated_events"]
+           if e["domain"] == "rack00" and len(e["jobs"]) == 2]
+    return dict(rep, scenario="two_jobs_rack_outage",
+                both_jobs_hit_in_same_event=bool(hit))
+
+
+@preset("priority_preemption",
+        "A high-priority job loses a node with the spare pool dry; with "
+        "preemption the low-priority job donates a machine (recovery in "
+        "minutes), without it the job stalls until repairs land (hours).")
+def priority_preemption(seed: int = 0) -> dict:
+    crash = (FaultEvent(3600.0, "node0001", "node_hw",
+                        degrades_only=False),)
+    cfg = FleetConfig(
+        jobs=(_job("hi", priority=10, min_nodes=4),     # flagship: no shrink
+              _job("lo", priority=1, min_nodes=2)),     # elastic
+        n_nodes=8, n_spares=0, repair_hours=4.0,
+        scripted=crash, seed=seed)
+    with_p = run_fleet(cfg, seed=seed)
+    without = run_fleet(no_preemption(cfg), seed=seed)
+    hi_p, hi_n = with_p["jobs"]["hi"], without["jobs"]["hi"]
+    return {
+        "scenario": "priority_preemption",
+        "seed": seed,
+        "same_fault_timeline": (with_p["faults"]["injected"]
+                                == without["faults"]["injected"]),
+        "preemption": with_p,
+        "no_preemption": without,
+        "hi_recovery_s": {
+            "preemption": hi_p["recovery"]["total_downtime_s"],
+            "no_preemption": hi_n["recovery"]["total_downtime_s"],
+        },
+        "hi_end_to_end_days": {
+            "preemption": hi_p["end_to_end_days"],
+            "no_preemption": hi_n["end_to_end_days"],
+        },
+        "preemption_recovers_faster": (
+            hi_p["recovery"]["total_downtime_s"]
+            < hi_n["recovery"]["total_downtime_s"]),
+        "one_clock": with_p["one_clock"] and without["one_clock"],
+    }
+
+
+@preset("spare_pool_starvation",
+        "Three jobs vs one spare under a heavy stochastic fault mix: the "
+        "claim ledger arbitrates every replacement, losers shrink or wait "
+        "for repairs; no node is ever double-granted.")
+def spare_pool_starvation(seed: int = 0) -> dict:
+    cfg = FleetConfig(
+        jobs=(_job("etl", priority=0, min_nodes=2, ideal_hours=24.0),
+              _job("pretrain", priority=5, min_nodes=2, ideal_hours=24.0),
+              _job("ablation", priority=0, min_nodes=2, ideal_hours=24.0)),
+        n_nodes=12, n_spares=1, nodes_per_rack=4, repair_hours=12.0,
+        mtbf_node_days=0.8, horizon_days=16.0, p_cascade=0.2,
+        seed=seed)
+    rep = run_fleet(cfg, seed=seed)
+    sched = rep["fleet"]["scheduler"]
+    return dict(rep, scenario="spare_pool_starvation",
+                pool_contended=sched["claims_denied"] > 0)
+
+
+@preset("fleet_week_soak",
+        "The soak engine's multi-job mode: three mixed-priority jobs share "
+        "16 nodes for days of modelled training under the Table-I mix plus "
+        "rack outages, reporting per-job and fleet-level goodput.")
+def fleet_week_soak(seed: int = 0) -> dict:
+    from repro.sim.soak import run_multi_job_soak
+
+    rep = run_multi_job_soak(
+        job_sizes=(6, 4, 4), ideal_days=2.0, n_nodes=16, n_spares=3,
+        mtbf_node_days=25.0, rack_mtbf_days=60.0, seed=seed)
+    return dict(rep, scenario="fleet_week_soak")
+
+
+@preset("mixed_policy_fleet",
+        "A TRANSOM-managed job and a manual-baseline job side by side on "
+        "one topology and one fault environment: fleet-level proof that "
+        "detection+restore policy, not luck, drives the goodput gap.")
+def mixed_policy_fleet(seed: int = 0) -> dict:
+    cfg = FleetConfig(
+        jobs=(_job("transom", n_nodes=6, ideal_hours=24.0,
+                   policy=transom_policy()),
+              _job("manual", n_nodes=6, ideal_hours=24.0,
+                   policy=manual_policy())),
+        n_nodes=12, n_spares=4, nodes_per_rack=6,
+        mtbf_node_days=1.0, horizon_days=20.0, seed=seed)
+    rep = run_fleet(cfg, seed=seed)
+    jt, jm = rep["jobs"]["transom"], rep["jobs"]["manual"]
+    return dict(rep, scenario="mixed_policy_fleet",
+                transom_beats_manual=(jt["effective_time_ratio"]
+                                      > jm["effective_time_ratio"]))
+
+
+# --------------------------------------------------------------------------- #
+def run_preset(name: str, seed: int = 0) -> dict:
+    if name not in PRESETS:
+        raise KeyError(f"unknown fleet preset {name!r}; have: "
+                       f"{', '.join(sorted(PRESETS))}")
+    return PRESETS[name].run(seed)
+
+
+def preset_names() -> List[str]:
+    return sorted(PRESETS)

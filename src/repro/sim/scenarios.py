@@ -546,6 +546,28 @@ def _policy_frontier(seed: int = 0) -> dict:
 
 
 # --------------------------------------------------------------------------- #
+# Fleet presets: multi-job scenarios on one shared topology
+# --------------------------------------------------------------------------- #
+def _register_fleet_presets() -> None:
+    """Surface ``repro.fleet`` presets (N jobs, one topology, shared spare
+    pool, contended NAS) in this catalog so ``--list``/``--run all`` cover
+    the whole fleet. Registration is best-effort: a broken or absent fleet
+    package must not take the single-job catalog down with it (the fleet's
+    own CLI and CI gates fail loudly on their own)."""
+    try:
+        from repro.fleet.presets import PRESETS as FLEET_PRESETS
+    except ImportError:
+        return
+
+    for p in FLEET_PRESETS.values():
+        SCENARIOS[p.name] = Scenario(p.name, f"[fleet] {p.description}",
+                                     p.run)
+
+
+_register_fleet_presets()
+
+
+# --------------------------------------------------------------------------- #
 # CLI
 # --------------------------------------------------------------------------- #
 def run_scenario(name: str, seed: int = 0) -> dict:

@@ -433,3 +433,40 @@ def run_soak(cfg: SoakConfig, seed: Optional[int] = None) -> dict:
     at the same seed face the same fault timeline.
     """
     return _SoakRun(cfg, cfg.seed if seed is None else seed).run()
+
+
+def run_multi_job_soak(job_sizes=(8, 8), ideal_days: float = 7.0,
+                       n_nodes: int = 16, n_spares: int = 4,
+                       nodes_per_rack: int = 8,
+                       mtbf_node_days: float = 110.0,
+                       p_cascade: float = 0.1,
+                       rack_mtbf_days: float = 0.0,
+                       repair_hours: float = 24.0,
+                       ckpt_interval_s: float = 1800.0,
+                       preemption: bool = True,
+                       seed: int = 0) -> dict:
+    """The soak engine's **multi-job mode**: the same long-horizon stochastic
+    fault environment (Table-I mix, cascades, whole-rack outages), but with
+    ``len(job_sizes)`` concurrent jobs gang-scheduled onto ONE topology and
+    arbitrating one spare pool. Delegates to :mod:`repro.fleet.engine`;
+    returns its per-job + fleet-level goodput report.
+
+    Jobs are named ``job0..jobN-1``; earlier entries get higher priority
+    (job0 is the flagship, later jobs are preemption donors).
+    """
+    from repro.fleet.engine import FleetConfig, run_fleet
+    from repro.fleet.scheduler import JobSpec
+
+    jobs = tuple(
+        JobSpec(f"job{i}", int(size), priority=len(job_sizes) - i,
+                ideal_hours=ideal_days * 24.0,
+                min_nodes=max(2, int(size) // 2),
+                ckpt_interval_s=ckpt_interval_s)
+        for i, size in enumerate(job_sizes))
+    cfg = FleetConfig(
+        jobs=jobs, n_nodes=n_nodes, n_spares=n_spares,
+        nodes_per_rack=nodes_per_rack, repair_hours=repair_hours,
+        preemption=preemption, mtbf_node_days=mtbf_node_days,
+        p_cascade=p_cascade, rack_mtbf_days=rack_mtbf_days,
+        horizon_days=ideal_days * 8.0, seed=seed)
+    return run_fleet(cfg, seed=seed)

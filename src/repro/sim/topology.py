@@ -38,6 +38,23 @@ class Node:
     switch: str = ""
 
 
+class DoubleGrantError(RuntimeError):
+    """A node was granted to a second claimant while still leased.
+
+    The claim ledger makes this impossible through the public API; raising
+    (rather than silently reassigning) turns any future regression in the
+    arbitration path into a loud failure instead of two jobs sharing a
+    machine."""
+
+
+@dataclass(frozen=True)
+class NodeLease:
+    """Ownership record: which claimant (job) holds which machine."""
+    node: str
+    claimant: str
+    granted_at: float
+
+
 def nodes_for_fault_rate(faults_per_week: float,
                          mtbf_node_days: float) -> int:
     """MTBF-scaled node count: the fleet size at which independent per-node
@@ -61,9 +78,12 @@ class Topology:
     and rank-binding layers are additive.
     """
 
+    DEFAULT_CLAIMANT = "job0"
+
     def __init__(self, n_nodes: int, n_spares: int = 4,
                  repair_hours: float = 24.0, nodes_per_rack: int = 8,
-                 racks_per_switch: int = 4, clock: Optional[SimClock] = None):
+                 racks_per_switch: int = 4, clock: Optional[SimClock] = None,
+                 auto_assign: bool = True):
         self.clock = clock or SimClock()
         self.nodes_per_rack = max(nodes_per_rack, 1)
         self.racks_per_switch = max(racks_per_switch, 1)
@@ -75,9 +95,19 @@ class Topology:
         self.spares: List[Node] = [
             self._make(f"spare{i:04d}", n_nodes + i) for i in range(n_spares)]
         self.repair_s = repair_hours * 3600.0
-        self.assigned: List[str] = list(self.nodes)   # nodes running the job
+        # claim ledger: node -> lease. Every node a job runs on is leased;
+        # the single-job facade below leases to DEFAULT_CLAIMANT, the fleet
+        # scheduler leases per job. A node can hold at most one lease —
+        # granting a leased node raises DoubleGrantError.
+        self._leases: Dict[str, NodeLease] = {}
+        # single-job facade: `assigned` is DEFAULT_CLAIMANT's node list (the
+        # historical ClusterSim interface). Multi-job callers pass
+        # auto_assign=False and allocate through the claim API instead.
+        self.assigned: List[str] = list(self.nodes) if auto_assign else []
         self._rank_map: Dict[int, str] = dict(enumerate(self.assigned))
         self._lock = threading.Lock()
+        for n in self.assigned:
+            self._leases[n] = NodeLease(n, self.DEFAULT_CLAIMANT, 0.0)
 
     # -- construction --------------------------------------------------- #
     def _make(self, name: str, slot: int) -> Node:
@@ -130,22 +160,79 @@ class Topology:
                 n.state = NodeState.HEALTHY
                 n.fail_category = None
 
-    # -- scheduling ------------------------------------------------------ #
-    def evict(self, name: str, t: float) -> None:
-        """Cordon a bad node and return it to the repair queue."""
-        node = self.nodes.get(name)
-        if node is not None:
-            node.state = NodeState.CORDONED
-            node.repair_at = t + self.repair_s
-        if name in self.assigned:
-            self.assigned.remove(name)
+    # -- claim ledger (shared spare-pool arbitration) -------------------- #
+    def _grant(self, name: str, claimant: str) -> None:
+        """Record a lease; the one place ownership is written. Raises
+        :class:`DoubleGrantError` if the node is already leased — two
+        concurrent claimants can never be handed the same machine."""
+        if name in self._leases:
+            raise DoubleGrantError(
+                f"{name} already leased to {self._leases[name].claimant!r}, "
+                f"refused grant to {claimant!r}")
+        self._leases[name] = NodeLease(name, claimant, self.clock.seconds)
 
-    def schedule_replacement(self, anti_affinity: Set[str],
-                             avoid_domains: Iterable[str] = ()
-                             ) -> Optional[str]:
-        """Pick a healthy node not in the anti-affinity set (fresh spare
-        first, then repaired nodes), preferring nodes outside the given
-        rack/switch failure domains.
+    def owner_of(self, name: str) -> Optional[str]:
+        lease = self._leases.get(name)
+        return lease.claimant if lease is not None else None
+
+    def leases_of(self, claimant: str) -> List[str]:
+        return sorted(n for n, l in self._leases.items()
+                      if l.claimant == claimant)
+
+    def n_leased(self) -> int:
+        return len(self._leases)
+
+    def release_node(self, name: str, claimant: Optional[str] = None) -> None:
+        """Drop a lease (eviction, job completion, preemption donation).
+        When ``claimant`` is given it must match the lease holder."""
+        with self._lock:
+            lease = self._leases.get(name)
+            if lease is None:
+                return
+            if claimant is not None and lease.claimant != claimant:
+                raise DoubleGrantError(
+                    f"{claimant!r} tried to release {name} "
+                    f"leased to {lease.claimant!r}")
+            del self._leases[name]
+
+    def free_nodes(self) -> List[str]:
+        """Healthy, unleased active nodes (spares not included: they stay in
+        the replacement pool until claimed)."""
+        return sorted(n.name for n in self.nodes.values()
+                      if n.state == NodeState.HEALTHY
+                      and n.name not in self._leases
+                      and n.name not in self.assigned)
+
+    def claim_specific(self, name: str, claimant: str) -> str:
+        """Gang scheduling: claim one named free healthy node atomically."""
+        with self._lock:
+            node = self.nodes.get(name)
+            if node is None:
+                raise KeyError(f"unknown node {name!r}")
+            if node.state != NodeState.HEALTHY:
+                raise ValueError(f"{name} is {node.state.value}, not claimable")
+            self._grant(name, claimant)
+        return name
+
+    def reassign_lease(self, name: str, new_claimant: str) -> None:
+        """Atomically move a leased node between claimants (preemption: a
+        low-priority job donates a machine to a high-priority recovery).
+        The node is never observable as unleased in between."""
+        with self._lock:
+            lease = self._leases.get(name)
+            if lease is None:
+                raise KeyError(f"{name} has no lease to reassign")
+            self._leases[name] = NodeLease(name, new_claimant,
+                                           self.clock.seconds)
+
+    def claim_replacement(self, claimant: str, anti_affinity: Set[str],
+                          avoid_domains: Iterable[str] = ()
+                          ) -> Optional[str]:
+        """Arbitrated replacement pick: a healthy unleased node not in the
+        anti-affinity set (fresh spare first, then repaired nodes),
+        preferring nodes outside the given rack/switch failure domains.
+        The winner is leased to ``claimant`` before the call returns, so
+        interleaved claimants can never be granted the same machine.
 
         Domain avoidance is a soft preference: when every candidate sits in
         an avoided domain (small clusters where one rack holds everything),
@@ -157,29 +244,62 @@ class Topology:
         def domain_ok(n: Node) -> bool:
             return n.rack not in avoid and n.switch not in avoid
 
-        # move the whole spare pool into the node set, then pick in
-        # preference order: spares outside avoided domains, any healthy
-        # unassigned node outside them, then the same two tiers in-domain
-        fresh = []
-        while self.spares:
-            sp = self.spares.pop(0)
-            self.nodes[sp.name] = sp
-            fresh.append(sp)
-        fresh_names = {n.name for n in fresh}
-        repaired = [n for n in self.nodes.values()
-                    if n.state == NodeState.HEALTHY
-                    and n.name not in self.assigned
-                    and n.name not in fresh_names]
-        for require_domain in (True, False):
-            for n in fresh + repaired:
-                if n.state != NodeState.HEALTHY or n.name in anti_affinity \
-                        or n.name in self.assigned:
-                    continue
-                if require_domain and not domain_ok(n):
-                    continue
-                self.assigned.append(n.name)
-                return n.name
-        return None
+        with self._lock:
+            # move the whole spare pool into the node set, then pick in
+            # preference order: spares outside avoided domains, any healthy
+            # unleased node outside them, then the same two tiers in-domain
+            fresh = []
+            while self.spares:
+                sp = self.spares.pop(0)
+                self.nodes[sp.name] = sp
+                fresh.append(sp)
+            fresh_names = {n.name for n in fresh}
+            repaired = [n for n in self.nodes.values()
+                        if n.state == NodeState.HEALTHY
+                        and n.name not in self._leases
+                        and n.name not in self.assigned
+                        and n.name not in fresh_names]
+            for require_domain in (True, False):
+                for n in fresh + repaired:
+                    if n.state != NodeState.HEALTHY \
+                            or n.name in anti_affinity \
+                            or n.name in self._leases \
+                            or n.name in self.assigned:
+                        continue
+                    if require_domain and not domain_ok(n):
+                        continue
+                    self._grant(n.name, claimant)
+                    return n.name
+            return None
+
+    # -- scheduling ------------------------------------------------------ #
+    def cordon(self, name: str, t: float) -> None:
+        """Mark a bad node cordoned and queue it for repair (state change
+        only; lease/assignment bookkeeping is the caller's)."""
+        node = self.nodes.get(name)
+        if node is not None:
+            node.state = NodeState.CORDONED
+            node.repair_at = t + self.repair_s
+
+    def evict(self, name: str, t: float) -> None:
+        """Cordon a bad node, release its lease and return it to the repair
+        queue."""
+        self.cordon(name, t)
+        self.release_node(name)
+        if name in self.assigned:
+            self.assigned.remove(name)
+
+    def schedule_replacement(self, anti_affinity: Set[str],
+                             avoid_domains: Iterable[str] = (),
+                             claimant: Optional[str] = None
+                             ) -> Optional[str]:
+        """Single-job facade over :meth:`claim_replacement`: the granted node
+        joins ``assigned`` (the historical ClusterSim behaviour)."""
+        name = self.claim_replacement(claimant or self.DEFAULT_CLAIMANT,
+                                      anti_affinity, avoid_domains)
+        if name is not None:
+            self.assigned.append(name)
+        return name
 
     def bad_assigned_nodes(self) -> List[str]:
         return [n for n in self.assigned
@@ -237,4 +357,4 @@ class Topology:
         from collections import Counter
         c = Counter(n.state.value for n in self.nodes.values())
         return {"assigned": len(self.assigned), "spares": len(self.spares),
-                **dict(c)}
+                "leased": len(self._leases), **dict(c)}

@@ -84,6 +84,7 @@ def test_soak_waits_for_repair_when_shrink_disabled():
         rep["recovery"]["restarts"] <= rep["recovery"]["total_downtime_s"]
 
 
+@pytest.mark.slow
 def test_heavy_cascades_force_restores_down_the_waterfall():
     # p_cascade=1 with a short window: follow-on faults land inside the open
     # recovery transaction (absorbed), and node-attributable ones join its
@@ -123,6 +124,7 @@ def test_nodes_for_fault_rate_matches_anchors():
 # --------------------------------------------------------------------------- #
 # policy sweep
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_sweep_small_grid_is_deterministic_and_complete():
     a = run_sweep("small", seed=0)
     b = run_sweep("small", seed=0)
@@ -164,6 +166,7 @@ def test_unknown_grid_raises():
 # --------------------------------------------------------------------------- #
 # scenario presets over the soak engine
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_soak_scenarios_registered_and_deterministic():
     from repro.sim.scenarios import SCENARIOS, run_scenario
 
@@ -222,6 +225,7 @@ def test_bench_gate_passes_identical_and_trips_on_regression():
     assert any("collapsed" in m for m in gate(collapsed, base))
 
 
+@pytest.mark.slow
 def test_committed_fig6_baseline_matches_current_code():
     # the committed baseline must be reproducible by the current tree,
     # otherwise the CI bench gate drifts into vacuity
