@@ -3,22 +3,38 @@
 Real data movement at a scaled-down size validates the code path and gives a
 measured in-process number; the paper-scale latency is derived from the same
 run through the calibrated bandwidth clocks (NAS 71.1 MB/s/rank — the paper's
-own measured constant — vs in-memory cache).
+own measured constant — vs in-memory cache). Both legs are *measured through
+the clocked code paths*: the TCE load number is the modelled seconds the
+restore waterfall actually charged, not an analytic formula.
+
+Beyond the paper figure, the ``datapath`` section A/B-tests the checkpoint
+datapath: the legacy path (serial puts, bounce-buffer staging, copying cache
+reads, double reconciler gets, full re-persist every save, ``tobytes()``
+checksums) against the zero-copy / parallel / delta path, counting every
+byte physically copied per steady-state save; and the ``compression``
+section reports modelled NAS persist/restore time for raw vs delta vs
+delta+int8 (Pallas blockwise quantisation).
 
 Paper result: GPT3-7B save ~10x / load ~7.5x; GPT3-175B load 20x / save 16x;
 save drops ~200-255 s -> < 10 s.
+
+``--json BENCH_tce.json`` emits the artifact ``scripts/bench_gate.py`` gates
+on. Every field except the ``measured`` block is deterministic (byte counts
+and modelled seconds); ``measured`` holds wall-clock times and is excluded
+from CI's double-run determinism diff.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import tempfile
 import time
 
 import numpy as np
 
-from repro.core.tce import DiskStore, NASStore, TCEngine, TCEConfig
-from repro.core.tce.model import TheoryParams, tce_theory
-from repro.core.tce.sharding import shard_state, unshard_state
-from repro.core.tce.store import SimClock
+from repro.core.tce import (DiskStore, METER, NASStore, TCEngine, TCEConfig)
+from repro.core.tce.sharding import shard_state
+from repro.core.tce.store import NAS_BW_PER_RANK, SimClock
 
 # model sizes (params) and their training-state footprint (16 B/param:
 # fp32 weights+grads-free Adam: 4 master + 8 moments + 2 weights + pad)
@@ -27,6 +43,14 @@ STATE_BYTES_PER_PARAM = 14
 SCALE = 2_000          # scaled-down in-process state = real_bytes / SCALE
 N_NODES = 16           # 128 ranks
 RANKS_PER_NODE = 8     # ranks on one node write/read their NAS shares in parallel
+B_MEM = 1.92e9         # calibrated effective per-rank cache bandwidth
+
+# datapath A/B section: smaller state, more saves
+DP_NODES = 4
+DP_LEAVES = 16
+DP_LEAF_ROWS = 64 * 1024          # x8 f32 cols = 2 MiB/leaf, 32 MiB total
+DP_SAVES = 6                      # 1 cold + (DP_SAVES-1) steady-state
+DP_CHANGED_PER_SAVE = 4           # leaves mutated between steady saves
 
 
 def _mk_state(nbytes: int, seed: int = 0):
@@ -37,13 +61,21 @@ def _mk_state(nbytes: int, seed: int = 0):
             for i in range(n_leaves)}
 
 
-def run(verbose: bool = True):
+def _mk_dp_state(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {f"layer{i}/w": rng.standard_normal(
+        (DP_LEAF_ROWS, 8)).astype(np.float32) for i in range(DP_LEAVES)}
+
+
+def run_paper_models(verbose: bool = True):
+    """The Fig. 8 numbers: sync-NAS baseline vs TCE, modelled through the
+    clocked save and restore paths."""
     results = {}
-    t_total0 = time.perf_counter()
     for name, params in MODELS.items():
         real_bytes = params * STATE_BYTES_PER_PARAM
         state = _mk_state(int(real_bytes / SCALE), seed=1)
         actual_bytes = sum(a.nbytes for a in state.values())
+        scale_up = real_bytes / actual_bytes
 
         # --- baseline: synchronous NAS write (torch.save analogue) --------- #
         nas_clock = SimClock()
@@ -57,32 +89,32 @@ def run(verbose: bool = True):
             base_wall = time.perf_counter() - t0
             # ranks write in parallel on a real cluster -> modeled time is the
             # per-rank mean (all ranks equal here)
-            base_save_model = (nas_clock.seconds / N_NODES / RANKS_PER_NODE
-                               * (real_bytes / actual_bytes))
+            base_save_model = nas_clock.seconds / N_NODES / RANKS_PER_NODE \
+                * scale_up
             nas_clock.reset()
             _ = nas.read_all(7)
-            base_load_model = (nas_clock.seconds / N_NODES / RANKS_PER_NODE
-                               * (real_bytes / actual_bytes))
+            base_load_model = nas_clock.seconds / N_NODES / RANKS_PER_NODE \
+                * scale_up
 
         # --- TCE: async cache save + memory restore ------------------------ #
         with tempfile.TemporaryDirectory() as d:
             clock = SimClock()
-            # calibrated B_mem (effective per-rank cache bandwidth incl. copy
-            # pipeline) — paper's 175B example: ~10 s for ~19 GB/rank
-            eng = TCEngine(TCEConfig(n_nodes=N_NODES, mem_bw=1.92e9,
+            eng = TCEngine(TCEConfig(n_nodes=N_NODES, mem_bw=B_MEM,
                                      mem_limit_bytes=1 << 30),
                            DiskStore(d), clock=clock)
             t0 = time.perf_counter()
             h = eng.save(7, state)
             tce_wall = time.perf_counter() - t0          # training-visible stall
-            tce_save_model = (h.modeled_cache_s / RANKS_PER_NODE
-                              * (real_bytes / actual_bytes))
+            tce_save_model = (h.modeled_cache_s / RANKS_PER_NODE * scale_up)
             h.wait(30)
+            # measured restore: clock.seconds is what the waterfall charged
+            # (cache reads at B_mem, nodes in parallel) — not a formula
             clock.reset()
             t0 = time.perf_counter()
             step, got = eng.restore()
             tce_load_wall = time.perf_counter() - t0
-            tce_load_model = (real_bytes / N_NODES / RANKS_PER_NODE / 1.92e9)
+            assert eng.stats["restore_sources"]["cache"] == N_NODES
+            tce_load_model = clock.seconds / RANKS_PER_NODE * scale_up
             eng.close()
             assert set(got) == set(state)
 
@@ -91,31 +123,235 @@ def run(verbose: bool = True):
             "base_load_s": base_load_model, "tce_load_s": tce_load_model,
             "save_x": base_save_model / max(tce_save_model, 1e-9),
             "load_x": base_load_model / max(tce_load_model, 1e-9),
-            "tce_stall_wall_s": tce_wall, "base_wall_s": base_wall,
+            "_walls": {"tce_stall_wall_s": tce_wall, "base_wall_s": base_wall,
+                       "tce_load_wall_s": tce_load_wall},
         }
         if verbose:
             r = results[name]
             print(f"  {name}: save {r['base_save_s']:7.1f}s -> {r['tce_save_s']:5.1f}s "
                   f"({r['save_x']:.0f}x)   load {r['base_load_s']:7.1f}s -> "
                   f"{r['tce_load_s']:5.1f}s ({r['load_x']:.0f}x)   "
-                  f"[in-process stall: {r['tce_stall_wall_s']*1e3:.0f} ms vs "
-                  f"baseline {r['base_wall_s']*1e3:.0f} ms]")
+                  f"[in-process stall: {r['_walls']['tce_stall_wall_s']*1e3:.0f} ms vs "
+                  f"baseline {r['_walls']['base_wall_s']*1e3:.0f} ms]")
+    return results
+
+
+def _mutate_for_save(state: dict, k: int) -> None:
+    """The steady-state training churn pattern: save ``k`` mutates
+    DP_CHANGED_PER_SAVE leaves in place (most leaves change slowly at a
+    given save cadence, so delta has bytes to elide — a full-churn state
+    degrades gracefully to the full-copy path). The A/B and compression
+    sections share this so they benchmark the same workload."""
+    if not k:
+        return
+    for i in range(DP_CHANGED_PER_SAVE):
+        key = f"layer{(k * DP_CHANGED_PER_SAVE + i) % DP_LEAVES}/w"
+        state[key] = state[key] + np.float32(1.0)
+
+
+def _drive_saves(eng: TCEngine, seed: int = 3):
+    """DP_SAVES checkpoints under the shared churn pattern."""
+    state = _mk_dp_state(seed)
+    stalls, handles = [], []
+    for k in range(DP_SAVES):
+        _mutate_for_save(state, k)
+        h = eng.save((k + 1) * 100, state)
+        stalls.append(h.cache_wall_s)
+        handles.append(h)
+        eng.reconciler.quiesce(30)
+    return state, stalls, handles
+
+
+def run_datapath(verbose: bool = True):
+    """A/B: legacy vs zero-copy/parallel/delta datapath, byte-exact copy
+    accounting via the global CopyMeter.
+
+    The two engines run *interleaved* save-by-save (legacy, new, legacy,
+    new, ...) so a transient CPU-load spike hits both paths alike, and the
+    steady-state stall is the min over saves — together that makes the
+    wall-clock ratio robust on shared/noisy CI hosts."""
+    # cold-process warmup (thread pools, page cache, allocator arenas):
+    # measured stalls below must not include first-touch effects
+    with tempfile.TemporaryDirectory() as d:
+        eng = TCEngine(TCEConfig(n_nodes=DP_NODES, mem_limit_bytes=1 << 28),
+                       DiskStore(d))
+        _drive_saves(eng)
+        eng.close()
+    names = ["legacy", "new"]
+    with tempfile.TemporaryDirectory() as d_leg, \
+            tempfile.TemporaryDirectory() as d_new:
+        engines = {
+            "legacy": TCEngine(TCEConfig(n_nodes=DP_NODES,
+                                         legacy_datapath=True,
+                                         mem_limit_bytes=1 << 28),
+                               DiskStore(d_leg, legacy_crc=True)),
+            "new": TCEngine(TCEConfig(n_nodes=DP_NODES,
+                                      mem_limit_bytes=1 << 28),
+                            DiskStore(d_new)),
+        }
+        states = {n: _mk_dp_state(3) for n in names}
+        stalls = {n: [] for n in names}
+        handles = {n: [] for n in names}
+        copied = {n: 0 for n in names}
+        for k in range(DP_SAVES):
+            for name in names:
+                state, eng = states[name], engines[name]
+                _mutate_for_save(state, k)
+                m0 = METER.read()
+                h = eng.save((k + 1) * 100, state)
+                stalls[name].append(h.cache_wall_s)
+                handles[name].append(h)
+                eng.reconciler.quiesce(30)   # drain async work -> exact meter
+                copied[name] += METER.read() - m0
+        out = {}
+        for name in names:
+            eng, state = engines[name], states[name]
+            # verify the datapath end to end before trusting its numbers
+            for c in eng.caches:
+                c.wipe()
+            step, got = eng.restore()
+            assert step == DP_SAVES * 100
+            for k in state:
+                assert got[k].tobytes() == state[k].tobytes(), \
+                    f"{name} datapath restore not bit-exact at {k}"
+            eng.close()
+            out[name] = {
+                "bytes_copied_total": int(copied[name]),
+                "bytes_copied_per_save": int(copied[name] // DP_SAVES),
+                "bytes_staged_first_save": int(handles[name][0].bytes_staged),
+                "bytes_staged_steady": int(handles[name][-1].bytes_staged),
+                "state_bytes": int(handles[name][0].nbytes),
+                "_stall_wall_s": stalls[name],
+            }
+    legacy, new = out["legacy"], out["new"]
+    copy_x = legacy["bytes_copied_per_save"] / max(
+        new["bytes_copied_per_save"], 1)
+    # steady-state stall: drop the cold save; min over the rest is the
+    # standard load-spike-robust wall estimator
+    stall_legacy = float(np.min(legacy["_stall_wall_s"][1:]))
+    stall_new = float(np.min(new["_stall_wall_s"][1:]))
+    dp = {
+        "n_nodes": DP_NODES, "saves": DP_SAVES,
+        "changed_leaves_per_save": DP_CHANGED_PER_SAVE,
+        "total_leaves": DP_LEAVES,
+        "state_bytes": new["state_bytes"],
+        "legacy": {k: v for k, v in legacy.items() if not k.startswith("_")},
+        "new": {k: v for k, v in new.items() if not k.startswith("_")},
+        "copy_reduction_x": round(copy_x, 3),
+        "_measured": {
+            "stall_wall_ms_legacy": stall_legacy * 1e3,
+            "stall_wall_ms_new": stall_new * 1e3,
+            "stall_ratio_new_over_legacy": stall_new / max(stall_legacy, 1e-9),
+        },
+    }
+    if verbose:
+        print(f"  datapath: {legacy['bytes_copied_per_save']/1e6:.1f} MB -> "
+              f"{new['bytes_copied_per_save']/1e6:.1f} MB copied/save "
+              f"({copy_x:.1f}x less)   stall {stall_legacy*1e3:.1f} ms -> "
+              f"{stall_new*1e3:.1f} ms")
+    return dp
+
+
+def run_compression(verbose: bool = True):
+    """Modelled NAS persist/restore time: raw full vs delta vs delta+int8.
+    The NAS link (71.1 MB/s/rank) only ever sees *stored* bytes, so delta
+    refs and compressed payloads cut modelled time proportionally."""
+    out = {}
+    for name, cfg_kw in [
+            ("raw_full", dict(delta=False, codec="raw")),
+            ("delta", dict(delta=True, codec="raw")),
+            ("delta_int8", dict(delta=True, codec="int8",
+                                lossless_paths=("layer0/*",)))]:
+        with tempfile.TemporaryDirectory() as d:
+            clock = SimClock()
+            store = NASStore(d, clock=clock)
+            eng = TCEngine(TCEConfig(n_nodes=DP_NODES, backup=False,
+                                     mem_limit_bytes=1 << 28, **cfg_kw),
+                           store, clock=clock)
+            state, stalls, handles = _drive_saves(eng)
+            persist_s = clock.seconds     # NAS charges, summed over ranks
+            stored = store.stats["bytes_stored"]
+            raw = store.stats["bytes_raw"]
+            clock.reset()
+            for c in eng.caches:
+                c.wipe()
+            step, got = eng.restore()
+            restore_s = clock.seconds
+            eng.close()
+            out[name] = {
+                "nas_stored_bytes": int(stored),
+                "nas_raw_bytes": int(raw),
+                "stored_fraction": round(stored / max(raw, 1), 4),
+                "modeled_persist_s_per_rank": round(
+                    persist_s / DP_NODES / DP_SAVES, 4),
+                "modeled_restore_s_per_rank": round(restore_s / DP_NODES, 4),
+            }
+            if verbose:
+                o = out[name]
+                print(f"  compression[{name}]: stored {o['nas_stored_bytes']/1e6:6.1f} MB "
+                      f"({o['stored_fraction']:.0%} of raw)  "
+                      f"persist {o['modeled_persist_s_per_rank']:.2f} s/rank/save  "
+                      f"restore {o['modeled_restore_s_per_rank']:.2f} s/rank")
+    return out
+
+
+def run(verbose: bool = True):
+    t_total0 = time.perf_counter()
+    models = run_paper_models(verbose)
+    dp = run_datapath(verbose)
+    comp = run_compression(verbose)
     wall = time.perf_counter() - t_total0
 
-    g175 = results["gpt3-175b"]
+    g175 = models["gpt3-175b"]
+    measured = dict(dp.pop("_measured"))
+    measured["us_per_call"] = wall / len(MODELS) * 1e6
+    for name, r in models.items():
+        measured[f"{name}_walls"] = r.pop("_walls")
     return {
+        "bench": "tce",
         "name": "fig8_tce_ckpt",
-        "us_per_call": wall / len(MODELS) * 1e6,
+        "us_per_call": wall / len(MODELS) * 1e6,   # wall-based: stripped
+        "models": models,                          # from determinism diffs
+        "datapath": dp,
+        "compression": comp,
         "derived": (f"175b_save={g175['base_save_s']:.0f}s->"
                     f"{g175['tce_save_s']:.1f}s({g175['save_x']:.0f}x) "
-                    f"load={g175['load_x']:.0f}x"),
+                    f"load={g175['load_x']:.0f}x "
+                    f"copies/save={dp['copy_reduction_x']:.1f}x-less"),
         "checks": {
-            "save_under_10s_175b": g175["tce_save_s"] < 11,
-            "speedup_order_20x": 10 <= g175["save_x"] <= 40,
-            "baseline_200_255s": 150 <= g175["base_save_s"] <= 350,
+            "save_under_10s_175b": bool(g175["tce_save_s"] < 11),
+            "speedup_order_20x": bool(10 <= g175["save_x"] <= 40),
+            "baseline_200_255s": bool(150 <= g175["base_save_s"] <= 350),
+            "load_measured_via_clock": True,
+            "copy_reduction_2x": bool(dp["copy_reduction_x"] >= 2.0),
+            "delta_cuts_nas_bytes": bool(
+                comp["delta"]["nas_stored_bytes"]
+                < comp["raw_full"]["nas_stored_bytes"] / 2),
+            "int8_cuts_nas_bytes_further": bool(
+                comp["delta_int8"]["nas_stored_bytes"]
+                < comp["delta"]["nas_stored_bytes"]),
         },
+        "measured": measured,
     }
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_tce.json artifact")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    res = run(verbose=not args.quiet)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+        if not args.quiet:
+            print(f"wrote {args.json}")
+    if not args.quiet:
+        print({k: res[k] for k in ("derived", "checks")})
+    return 0 if all(res["checks"].values()) else 1
+
+
 if __name__ == "__main__":
-    print(run())
+    import sys
+    sys.exit(main())

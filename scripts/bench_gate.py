@@ -12,6 +12,13 @@ fails (exit 1) on regression. The artifact kind is auto-detected:
   fleet preset's utilization regresses past the tolerance, a preset
   disappears, the preemption gain collapses, or the NAS processor-sharing
   slowdown drifts off 2x for two equal flows.
+* ``BENCH_tce.json`` (``benchmarks/fig8_tce.py --json``): fails if any
+  paper-band check went false, the modeled 175B save speedup leaves the
+  paper's 10-40x band, bytes physically copied per steady-state save
+  regressed past the tolerance (or the legacy-vs-new reduction dropped
+  below 2x), or the measured save-stall wall time of the new datapath is no
+  longer at or below the legacy path's (same-machine A/B, so it is robust
+  to host speed differences).
 
 Usage:
 
@@ -30,6 +37,7 @@ _BASE_DIR = os.path.join(
     "benchmarks", "baselines")
 DEFAULT_BASELINE = os.path.join(_BASE_DIR, "BENCH_fig6.json")
 FLEET_BASELINE = os.path.join(_BASE_DIR, "BENCH_fleet.json")
+TCE_BASELINE = os.path.join(_BASE_DIR, "BENCH_tce.json")
 
 
 def _point_key(point: dict) -> Tuple:
@@ -91,6 +99,28 @@ def gate_fleet(fresh: dict, baseline: dict,
     return fails
 
 
+def gate_tce(fresh: dict, baseline: dict,
+             tolerance: float = 0.05) -> List[str]:
+    """TCE checkpoint-datapath gate. Returns failure messages (empty = pass)."""
+    fails: List[str] = []
+    # the artifact's own checks already encode the paper 10-40x band
+    # (speedup_order_20x) and the >=2x copy reduction (copy_reduction_2x) —
+    # fail on any of them rather than duplicating the thresholds here
+    for name, ok in fresh.get("checks", {}).items():
+        if not ok:
+            fails.append(f"tce check {name!r} went false")
+    old_copy = baseline["datapath"]["new"]["bytes_copied_per_save"]
+    new_copy = fresh["datapath"]["new"]["bytes_copied_per_save"]
+    if new_copy > old_copy * (1.0 + tolerance):
+        fails.append(f"bytes copied per steady-state save regressed: "
+                     f"{old_copy} -> {new_copy} (> {tolerance:.0%} more)")
+    stall_ratio = fresh["measured"]["stall_ratio_new_over_legacy"]
+    if stall_ratio > 1.0 + tolerance:
+        fails.append(f"new datapath save-stall wall time no longer beats the "
+                     f"legacy path: ratio {stall_ratio:.2f} (want <= 1)")
+    return fails
+
+
 def gate_any(fresh: dict, baseline: dict,
              tolerance: float = 0.05) -> List[str]:
     """Dispatch on artifact kind (the ``bench`` tag)."""
@@ -101,6 +131,8 @@ def gate_any(fresh: dict, baseline: dict,
                 f"baseline={kind_b!r}"]
     if kind_f == "fleet":
         return gate_fleet(fresh, baseline, tolerance=tolerance)
+    if kind_f == "tce":
+        return gate_tce(fresh, baseline, tolerance=tolerance)
     return gate(fresh, baseline, tolerance=tolerance)
 
 
@@ -118,8 +150,9 @@ def main(argv=None) -> int:
         fresh = json.load(f)
     baseline_path = args.baseline
     if baseline_path is None:
-        baseline_path = (FLEET_BASELINE if fresh.get("bench") == "fleet"
-                         else DEFAULT_BASELINE)
+        baseline_path = {"fleet": FLEET_BASELINE,
+                         "tce": TCE_BASELINE}.get(fresh.get("bench"),
+                                                  DEFAULT_BASELINE)
     with open(baseline_path) as f:
         baseline = json.load(f)
     fails = gate_any(fresh, baseline, tolerance=args.tolerance)
@@ -132,6 +165,12 @@ def main(argv=None) -> int:
         print(f"bench gate OK: {len(baseline['presets'])} fleet presets "
               f"within {args.tolerance:.0%} of baseline; preemption gain "
               f"{fresh['preemption']['gain']:.1f}x")
+    elif fresh.get("bench") == "tce":
+        print(f"bench gate OK: 175B save "
+              f"{fresh['models']['gpt3-175b']['save_x']:.0f}x, "
+              f"{fresh['datapath']['copy_reduction_x']:.1f}x fewer copies/save, "
+              f"stall ratio "
+              f"{fresh['measured']['stall_ratio_new_over_legacy']:.2f}")
     else:
         n = len(baseline["sweep"]["points"])
         print(f"bench gate OK: {n} grid points within {args.tolerance:.0%} "

@@ -43,6 +43,22 @@ diff "$TMP/BENCH_fleet.json" "$TMP/BENCH_fleet_b.json" \
     || { echo "FAIL: fleet bench is nondeterministic" >&2; exit 1; }
 python scripts/bench_gate.py "$TMP/BENCH_fleet.json"
 
+echo "== bench regression gate: TCE checkpoint datapath vs committed baseline =="
+python benchmarks/fig8_tce.py --quiet --json "$TMP/BENCH_tce.json"
+python benchmarks/fig8_tce.py --quiet --json "$TMP/BENCH_tce_b.json"
+# wall-clock fields live under "measured" (plus the top-level us_per_call
+# run.py consumes); strip them, then the artifact must be byte-identical
+python - "$TMP/BENCH_tce.json" "$TMP/BENCH_tce_b.json" <<'EOF'
+import json, sys
+for p in sys.argv[1:]:
+    d = json.load(open(p))
+    d.pop("measured", None); d.pop("us_per_call", None)
+    json.dump(d, open(p + ".det", "w"), indent=1, sort_keys=True)
+EOF
+diff "$TMP/BENCH_tce.json.det" "$TMP/BENCH_tce_b.json.det" \
+    || { echo "FAIL: TCE bench is nondeterministic" >&2; exit 1; }
+python scripts/bench_gate.py "$TMP/BENCH_tce.json"
+
 # every scenario (incl. weeklong_soak / policy_frontier and the fleet
 # presets) already ran twice in the determinism gates; just confirm the
 # catalog CLIs render

@@ -1,12 +1,16 @@
 from .engine import TCEngine, TCEConfig, SaveHandle
-from .cache import CacheServer, EvictionConfig
-from .store import DiskStore, NASStore
+from .cache import CacheServer, EvictionConfig, PutStats
+from .codec import decode_shard, encode_shard, is_lossless_path
+from .fastcopy import METER, CopyMeter, crc32_stream
+from .store import DiskStore, NASStore, SharedBandwidth
 from .model import tce_theory, TheoryParams
 from .sharding import ShardSpec, shard_state, unshard_state, reshard
 
 __all__ = [
     "TCEngine", "TCEConfig", "SaveHandle", "CacheServer", "EvictionConfig",
-    "DiskStore", "NASStore", "tce_theory", "TheoryParams",
+    "PutStats", "DiskStore", "NASStore", "SharedBandwidth",
+    "tce_theory", "TheoryParams", "METER", "CopyMeter", "crc32_stream",
+    "encode_shard", "decode_shard", "is_lossless_path",
     "ShardSpec", "shard_state", "unshard_state", "reshard",
 ]
 from .patch import transom_protect, start_step, restore_into  # noqa: E402,F401

@@ -6,6 +6,12 @@ convenience). JAX hosts are single-process-per-worker, so the arena here is an
 in-process slab allocator with the same contract: page-aligned slabs, a hard
 capacity, and explicit free — giving the cache server deterministic memory
 accounting (the eviction policies key off it).
+
+Slabs are **reference counted**: delta checkpointing lets two cached steps
+share one slab for an unchanged leaf (``retain``), and the slab's bytes are
+charged against the capacity exactly once. ``free_slab`` drops one reference;
+the memory is reclaimed when the last holder releases it — so ``used`` is
+always the exact number of live slab bytes, however many entries alias them.
 """
 from __future__ import annotations
 
@@ -27,13 +33,14 @@ class ArenaError(Exception):
 
 
 class Arena:
-    """Page-aligned slab allocator with a hard byte cap."""
+    """Page-aligned slab allocator with a hard byte cap and refcounted slabs."""
 
     def __init__(self, capacity_bytes: int, alignment: int = PAGE):
         self.capacity = int(capacity_bytes)
         self.alignment = alignment
         self._used = 0
         self._slabs: Dict[int, np.ndarray] = {}
+        self._refs: Dict[int, int] = {}
         self._next_id = 0
         self._lock = threading.Lock()
 
@@ -46,7 +53,8 @@ class Arena:
         return self.capacity - self._used
 
     def alloc(self, nbytes: int) -> int:
-        """Allocate a slab; returns a slab id. Raises ArenaError when full."""
+        """Allocate a slab (refcount 1); returns a slab id. Raises ArenaError
+        when full."""
         size = _round_up(max(nbytes, 1), self.alignment)
         with self._lock:
             if self._used + size > self.capacity:
@@ -55,8 +63,20 @@ class Arena:
             sid = self._next_id
             self._next_id += 1
             self._slabs[sid] = np.empty(size, np.uint8)
+            self._refs[sid] = 1
             self._used += size
             return sid
+
+    def retain(self, sid: int) -> int:
+        """Add a reference to an existing slab (shared by a delta entry)."""
+        with self._lock:
+            if sid not in self._slabs:
+                raise ArenaError(f"retain of unknown slab {sid}")
+            self._refs[sid] += 1
+            return sid
+
+    def refcount(self, sid: int) -> int:
+        return self._refs.get(sid, 0)
 
     def view(self, sid: int, nbytes: Optional[int] = None) -> np.ndarray:
         slab = self._slabs[sid]
@@ -70,12 +90,20 @@ class Arena:
         return sid
 
     def free_slab(self, sid: int) -> None:
+        """Drop one reference; reclaim the slab when the count hits zero."""
         with self._lock:
-            slab = self._slabs.pop(sid, None)
-            if slab is not None:
-                self._used -= slab.nbytes
+            refs = self._refs.get(sid)
+            if refs is None:
+                return
+            if refs > 1:
+                self._refs[sid] = refs - 1
+                return
+            del self._refs[sid]
+            slab = self._slabs.pop(sid)
+            self._used -= slab.nbytes
 
     def clear(self) -> None:
         with self._lock:
             self._slabs.clear()
+            self._refs.clear()
             self._used = 0

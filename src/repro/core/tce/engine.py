@@ -1,29 +1,43 @@
 """TCE — Transom Checkpoint Engine.
 
 Save path (paper §IV-C):
-  1. snapshot train-state leaves to host memory (chunked multi-threaded copy,
-     Alg. 2 analogue) into per-node cache servers      -> training resumes
-  2. asynchronously: reconciler persists every rank's shards to the store and
-     ring-backs-up each cache to node (rank+1) % n     -> zero training stall
+  1. snapshot train-state leaves to host memory into per-node cache servers
+     -> training resumes. Zero-copy staging: shard views are copied ONCE,
+     chunked + multi-threaded, straight into pre-allocated arena slabs, and
+     all node caches are written in parallel on a thread pool (the wall
+     clock now matches the "nodes write in parallel" model that
+     ``modeled_cache_s`` always claimed). Nothing else runs on the stall
+     path — no checksums, no hashing, no bounce buffers.
+  2. asynchronously: reconciler digests the staged slabs (streaming crc32
+     over zero-copy views), persists every rank's shards to the store and
+     ring-backs-up each cache to node (rank+1) % n — delta-aware (only
+     leaves whose digest changed move; the neighbour shares slabs for the
+     rest) and optionally compressed (zlib / int8 Pallas quantisation)
+                                                         -> zero training stall
 
 Load path (waterfall, with request dedup):
   local cache -> ring neighbour's backup (one fabric fetch per node, however
-  many local consumers ask) -> persistent store. A checkpoint written on N
-  nodes restores onto M != N nodes via resharding (elastic, beyond-paper).
+  many local consumers ask) -> persistent store (delta chains resolved
+  transparently). Per-rank cache/backup fetches run on the thread pool;
+  store reads stay serial (the NAS is the modelled shared bottleneck). A
+  checkpoint written on N nodes restores onto M != N nodes via resharding
+  (elastic, beyond-paper).
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.sim.clock import SimClock
 from repro.sim.topology import Topology
 
-from .cache import CacheServer, EvictionConfig
+from .cache import CacheServer, EvictionConfig, PutStats
+from .fastcopy import METER
 from .reconciler import Reconciler
 from .sharding import NodeShards, shard_state, unshard_state
 from .store import DiskStore
@@ -89,6 +103,18 @@ class TCEConfig:
     durability_timeout_s: float = 60.0
     copy_threads: int = 2
     mem_bw: float = MEM_BW            # modelled B_mem for cache writes
+    # ---- datapath knobs ------------------------------------------------- #
+    parallel_puts: bool = True        # per-rank cache puts/fetches on a pool
+    delta: bool = True                # persist/backup only changed leaves
+    codec: str = "raw"                # persist/backup payload: raw|zlib|int8
+    # leaves matching these fnmatch patterns are never quantised (int8 codec
+    # demotes them to lossless zlib) — optimizer-critical state stays exact
+    lossless_paths: Tuple[str, ...] = ("*opt*", "*adam*", "*mu*", "*nu*",
+                                       "*step*", "*scale*")
+    # A/B switch: the pre-datapath behaviour (serial puts, bounce-buffer
+    # staging, copying cache reads, double reconciler gets, full re-persist
+    # every save, tobytes() checksums). fig8_tce measures both.
+    legacy_datapath: bool = False
 
 
 class SaveHandle:
@@ -98,8 +124,13 @@ class SaveHandle:
         self.step = step
         self._engine = engine
         self.cache_wall_s: float = 0.0       # real time to reach cache (blocking)
-        self.modeled_cache_s: float = 0.0    # bytes / B_mem (paper's metric)
-        self.nbytes: int = 0
+        self.modeled_cache_s: float = 0.0    # staged bytes / B_mem (paper's metric)
+        self.nbytes: int = 0                 # logical checkpoint bytes
+        self.bytes_staged: int = 0           # bytes that had to reach the arena
+        # global-METER delta across the staging window; exact when the
+        # reconciler is quiescent during the stall (pipeline_durability, the
+        # default) — concurrent async persist traffic lands here otherwise
+        self.bytes_copied: int = 0
 
     def wait(self, timeout: float = 60.0) -> bool:
         """Block until the step is persisted + backed up (reconciled)."""
@@ -126,9 +157,18 @@ class TCEngine:
         self.fabric = fabric if fabric is not None \
             else Fabric(clock=self.clock, topology=self.topology)
         evict = EvictionConfig(cfg.mem_limit_bytes, cfg.max_cycles)
-        self.caches = [CacheServer(r, evict) for r in range(cfg.n_nodes)]
+        self.caches = [CacheServer(r, evict, legacy=cfg.legacy_datapath)
+                       for r in range(cfg.n_nodes)]
         self.reconciler = Reconciler(self.caches, store, self.fabric,
-                                     backup=cfg.backup, clock=self.clock)
+                                     backup=cfg.backup, clock=self.clock,
+                                     delta=cfg.delta, codec=cfg.codec,
+                                     lossless_paths=cfg.lossless_paths,
+                                     legacy=cfg.legacy_datapath)
+        self._parallel = cfg.parallel_puts and not cfg.legacy_datapath \
+            and cfg.n_nodes > 1
+        self._pool = ThreadPoolExecutor(
+            max_workers=min(cfg.n_nodes, 16),
+            thread_name_prefix="tce") if self._parallel else None
         if cfg.async_persist:
             self.reconciler.start()
         self.stats = {"saves": 0, "restores": 0, "fetch_requests": 0,
@@ -138,6 +178,14 @@ class TCEngine:
     # ------------------------------------------------------------------ #
     def close(self) -> None:
         self.reconciler.stop()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None   # engine stays usable (serial) after close
+
+    def _map(self, fn, items):
+        if self._parallel and self._pool is not None:
+            return list(self._pool.map(fn, items))
+        return [fn(x) for x in items]
 
     # ------------------------------------------------------------------ #
     def save(self, step: int, state, *, meta: Optional[dict] = None,
@@ -152,19 +200,22 @@ class TCEngine:
             # bounded-staleness pipeline: previous checkpoints become durable
             # before this one enters the cache (no-op in steady state)
             self.reconciler.quiesce(self.cfg.durability_timeout_s)
+        meter0 = METER.read()
         t0 = time.perf_counter()
         per_node = shard_state(flat, self.cfg.n_nodes)
-        nbytes = 0
-        max_node_bytes = 0
-        for rank, shards in enumerate(per_node):
-            node_bytes = sum(d.nbytes for _, d in shards.values())
-            nbytes += node_bytes
-            max_node_bytes = max(max_node_bytes, node_bytes)
-            self.caches[rank].put(step, shards, n_threads=self.cfg.copy_threads)
+
+        def _put(rank: int) -> PutStats:
+            return self.caches[rank].put(step, per_node[rank],
+                                         n_threads=self.cfg.copy_threads)
+
+        puts = self._map(_put, range(self.cfg.n_nodes))
         handle.cache_wall_s = time.perf_counter() - t0
+        handle.nbytes = sum(p.nbytes for p in puts)
+        handle.bytes_staged = sum(p.bytes_staged for p in puts)
+        handle.bytes_copied = METER.read() - meter0
         # nodes write their caches in parallel -> modelled latency is the max
-        handle.modeled_cache_s = max_node_bytes / self.cfg.mem_bw
-        handle.nbytes = nbytes
+        handle.modeled_cache_s = max(p.bytes_staged for p in puts) \
+            / self.cfg.mem_bw
         self.clock.advance(handle.modeled_cache_s)
         with self._lock:
             self.stats["saves"] += 1
@@ -178,14 +229,17 @@ class TCEngine:
 
     # ------------------------------------------------------------------ #
     def _fetch_backup(self, step: int, owner: int,
-                      memo: Dict[Tuple[int, int], Optional[NodeShards]]
+                      memo: Dict[Tuple[int, int], Optional[NodeShards]],
+                      memo_lock: Optional[threading.Lock] = None
                       ) -> Optional[NodeShards]:
         """Fetch `owner`'s shards from its ring neighbour's cache (dedup'd)."""
         key = (step, owner)
         with self._lock:
             self.stats["fetch_requests"] += 1
-        if key in memo:
-            return memo[key]
+        lock = memo_lock or threading.Lock()
+        with lock:
+            if key in memo:
+                return memo[key]
         holder = (owner + 1) % self.cfg.n_nodes
         shards = None
         if not self.fabric.is_down(holder):
@@ -200,7 +254,8 @@ class TCEngine:
                     shards = backup
                 except TransportError:
                     shards = None
-        memo[key] = shards
+        with lock:
+            memo[key] = shards
         return shards
 
     def restore(self, step: Optional[int] = None,
@@ -211,6 +266,11 @@ class TCEngine:
         With step=None, candidate steps are tried newest-first: a checkpoint
         whose async backup/persist had not completed when the failure hit is
         skipped in favour of the freshest *recoverable* one.
+
+        Cache/backup fetches for all ranks run concurrently on the thread
+        pool; the in-memory read is charged to the modelled clock at B_mem
+        (max per-node bytes — nodes read in parallel), fabric and NAS
+        transfers charge through their own bandwidth models.
 
         The returned state is the *global* (unsharded) state: a checkpoint
         written on N nodes restores through the ``store_full`` path onto an
@@ -231,42 +291,63 @@ class TCEngine:
                     last_err = e
             raise last_err
         memo: Dict[Tuple[int, int], Optional[NodeShards]] = {}
-        per_node: List[Optional[NodeShards]] = []
+        memo_lock = threading.Lock()
         sources = {"cache": 0, "backup": 0, "store": 0, "store_full": 0}
-        store_ranks = None
         try:
             store_ranks = self.store.manifest(step)["n_ranks"]
         except Exception:
             store_ranks = None
-        for rank in range(self.cfg.n_nodes):
-            shards = None
+
+        def _resolve_mem(rank: int) -> Tuple[Optional[str], Optional[NodeShards]]:
+            """Cache/backup waterfall for one rank (store stays serial)."""
             if not self.fabric.is_down(rank):
                 shards = self.caches[rank].get(step)
-            if shards is not None:
-                sources["cache"] += 1
-            else:
-                # consumers on the node all want the same remote shards; the
-                # fetch is deduplicated through `memo`
-                for _ in range(max(consumers_per_node - 1, 0)):
-                    self._fetch_backup(step, rank, memo)
-                shards = self._fetch_backup(step, rank, memo)
                 if shards is not None:
-                    sources["backup"] += 1
-                elif store_ranks == self.cfg.n_nodes:
+                    return "cache", shards
+            # consumers on the node all want the same remote shards; the
+            # fetch is deduplicated through `memo`
+            for _ in range(max(consumers_per_node - 1, 0)):
+                self._fetch_backup(step, rank, memo, memo_lock)
+            shards = self._fetch_backup(step, rank, memo, memo_lock)
+            if shards is not None:
+                return "backup", shards
+            return None, None
+
+        resolved = self._map(_resolve_mem, range(self.cfg.n_nodes))
+
+        per_node: List[Optional[NodeShards]] = []
+        full_read = False
+        for rank, (src, shards) in enumerate(resolved):
+            if shards is None:
+                if store_ranks == self.cfg.n_nodes:
+                    # NAS reads are serial: the store is the modelled shared
+                    # bottleneck (and SharedBandwidth charging is not
+                    # reentrant)
                     shards = self.store.read_rank(step, rank)
-                    sources["store"] += 1
+                    src = "store"
                 elif store_ranks is not None:
                     # topology changed since this step was written: fall back
                     # to a full store read in the manifest's own rank layout
                     # (elastic reshard path)
                     per_node = self.store.read_all(step)
                     sources["store_full"] = 1
+                    full_read = True
                     break
                 else:
                     raise FileNotFoundError(
                         f"step {step}: rank {rank} unrecoverable "
                         f"(cache lost, backup lost, not persisted)")
+            sources[src] += 1
             per_node.append(shards)
+        if not full_read:
+            # local in-memory reads happen in parallel across nodes: charge
+            # the max per-node byte count at B_mem on the modelled clock
+            # (fabric/NAS legs already charged themselves)
+            mem_bytes = [sum(d.nbytes for _, d in shards.values())
+                         for (src, _), shards in zip(resolved, per_node)
+                         if src == "cache" and shards]
+            if mem_bytes:
+                self.clock.advance(max(mem_bytes) / self.cfg.mem_bw)
         state = unshard_state(per_node)
         with self._lock:
             self.stats["restores"] += 1

@@ -9,16 +9,32 @@ The reconciler never tracks in-flight work: each pass *diffs observed state
 against desired state* and (re)issues whatever is missing. Failed actions
 leave the flags unset, so the next pass retries them — idempotent by
 construction, which is what gives crash/final-state consistency.
+
+Datapath: one zero-copy ``cache.get`` view feeds *both* the persist and the
+backup of an entry (the pre-datapath code materialised two full copies per
+step per pass). With ``delta=True`` the reconciler computes per-leaf content
+digests here — streaming crc32 over the arena views, *off* the training
+stall path (the save stall is one parallel memcpy and nothing else) — and
+only leaves whose digest changed since the rank's last persisted step hit
+the store (unchanged leaves become path-compressed index refs) or cross the
+fabric to the ring neighbour (the neighbour rebuilds its backup entry from
+its previous one plus the changed leaves, sharing slabs for the rest).
+With a non-raw ``codec`` the backup payload crosses the fabric encoded
+(zlib lossless / int8 blockwise-quantised via the Pallas kernel) and is
+decoded on arrival.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.sim.clock import SimClock
 
 from .cache import CacheServer
+from .codec import decode_shard, encode_shard, is_lossless_path
+from .fastcopy import crc32_stream
+from .sharding import NodeShards
 from .store import DiskStore
 from .transport import Fabric, TransportError
 
@@ -27,12 +43,19 @@ class Reconciler:
     def __init__(self, caches: List[CacheServer], store: DiskStore,
                  fabric: Optional[Fabric], *, backup: bool = True,
                  interval_s: float = 0.02,
-                 clock: Optional[SimClock] = None):
+                 clock: Optional[SimClock] = None,
+                 delta: bool = True, codec: str = "raw",
+                 lossless_paths: Tuple[str, ...] = (),
+                 legacy: bool = False):
         self.caches = caches
         self.store = store
         self.fabric = fabric
         self.backup = backup
         self.interval = interval_s
+        self.delta = delta and not legacy
+        self.codec = codec if not legacy else "raw"
+        self.lossless_paths = tuple(lossless_paths)
+        self.legacy = legacy
         # shared substrate clock: durability timestamps land on the same
         # timeline as fabric transfers and TOL recovery phases
         self.clock = clock or getattr(fabric, "clock", None) \
@@ -42,9 +65,16 @@ class Reconciler:
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
         self._committed: set = set()
+        self._last_committed: Optional[int] = None
+        # rank -> {path: (home_step, digest)} of the last persisted entry;
+        # home_step is where the leaf's file actually lives (path-compressed)
+        self._persisted_digests: Dict[int, Dict[str, Tuple[int, int]]] = {}
         self.durable_at: Dict[int, float] = {}   # step -> modelled seconds
         self.errors: List[str] = []
         self.passes = 0
+        self.stats = {"delta_leaves_skipped": 0, "delta_leaves_written": 0,
+                      "backup_leaves_sent": 0, "backup_leaves_reused": 0,
+                      "backup_bytes_wire": 0}
 
     # ------------------------------------------------------------------ #
     def start(self) -> None:
@@ -111,6 +141,121 @@ class Reconciler:
                 self.errors.append(repr(e))
 
     # ------------------------------------------------------------------ #
+    def _digest_map(self, cache: CacheServer, step: int,
+                    shards: NodeShards) -> Optional[Dict[str, int]]:
+        """Per-leaf streaming crc32 over the entry's arena views — computed
+        once (asynchronously, never on the save stall path), recorded on the
+        entry, and reused by later passes."""
+        if not self.delta:
+            return None
+        existing = cache.digests(step)
+        if existing and all(d is not None for d, _n, _s in existing.values()):
+            return {p: d for p, (d, _n, _s) in existing.items()}
+        dig = {p: crc32_stream(d) for p, (sp, d) in shards.items()}
+        cache.set_digests(step, dig)
+        return dig
+
+    def _persist(self, cache: CacheServer, step: int, shards: NodeShards,
+                 digmap: Optional[Dict[str, int]]) -> None:
+        rank = cache.rank
+        refs: Dict[str, Tuple[int, int]] = {}
+        base = self._persisted_digests.get(rank) if self.delta else None
+        if base and digmap:
+            for path, digest in digmap.items():
+                prev = base.get(path)
+                if prev is not None and prev[1] == digest:
+                    refs[path] = prev            # (home_step, digest)
+        self.store.write_rank(step, rank, shards, refs=refs, digests=digmap,
+                              codec=self.codec,
+                              lossless_paths=self.lossless_paths)
+        self.stats["delta_leaves_skipped"] += len(refs)
+        self.stats["delta_leaves_written"] += len(shards) - len(refs)
+        if self.delta and digmap:
+            self._persisted_digests[rank] = {
+                path: (refs[path] if path in refs else (step, digest))
+                for path, digest in digmap.items()}
+        cache.mark(step, persisted=True)
+
+    def _backup(self, cache: CacheServer, step: int, shards: NodeShards,
+                digmap: Optional[Dict[str, int]]) -> None:
+        n = len(self.caches)
+        rank = cache.rank
+        dst = (rank + 1) % n
+        dst_cache = self.caches[dst]
+        base_step = None
+        changed = set(shards)
+        if digmap is not None:
+            base_step = dst_cache.latest_step_for(rank, before_step=step)
+            prev = (dst_cache.digests(base_step, owner_rank=rank)
+                    if base_step is not None else None)
+            # a leaf dropped from the state must not be resurrected from the
+            # base entry (put_delta carries every base leaf over) — schema
+            # changes fall back to a full send
+            if prev and set(prev) <= set(shards):
+                changed = {p for p in shards
+                           if p not in digmap or p not in prev
+                           or prev[p][0] != digmap[p]
+                           or prev[p][2] != shards[p][0]}
+            else:
+                base_step = None
+        wire: Dict = {}
+        metas: Dict[str, tuple] = {}
+        for path in changed:
+            spec, data = shards[path]
+            enc, payload, meta = encode_shard(
+                data, self.codec,
+                lossless=is_lossless_path(path, self.lossless_paths))
+            wire[path] = payload
+            metas[path] = (enc, meta, str(data.dtype), tuple(data.shape))
+        self.fabric.send(rank, dst, wire)
+        self.stats["backup_bytes_wire"] += sum(p.nbytes for p in wire.values())
+        decoded: NodeShards = {
+            path: (shards[path][0],
+                   decode_shard(metas[path][0], wire[path], metas[path][2],
+                                metas[path][3], metas[path][1]))
+            for path in changed}
+        sent, reused = len(changed), len(shards) - len(changed)
+        if base_step is not None and len(changed) < len(shards):
+            try:
+                dst_cache.put_delta(step, decoded, base_step,
+                                    owner_rank=rank, is_backup=True,
+                                    digests=digmap)
+                self.stats["backup_leaves_sent"] += sent
+                self.stats["backup_leaves_reused"] += reused
+                cache.mark(step, backed_up=True)
+                return
+            except KeyError:
+                # base evicted between digest query and put: fall through to
+                # a full re-send (idempotent; flags stay unset on failure)
+                missing = {p: shards[p] for p in shards if p not in changed}
+                for path, (spec, data) in missing.items():
+                    enc, payload, meta = encode_shard(
+                        data, self.codec,
+                        lossless=is_lossless_path(path, self.lossless_paths))
+                    wire[path] = payload
+                    decoded[path] = (spec, decode_shard(
+                        enc, payload, str(data.dtype), tuple(data.shape), meta))
+                self.fabric.send(rank, dst,
+                                 {p: wire[p] for p in missing})
+                self.stats["backup_bytes_wire"] += sum(
+                    wire[p].nbytes for p in missing)
+                sent, reused = len(shards), 0
+        dst_cache.put(step, decoded, is_backup=True, owner_rank=rank,
+                      digests=digmap)
+        self.stats["backup_leaves_sent"] += sent
+        self.stats["backup_leaves_reused"] += reused
+        cache.mark(step, backed_up=True)
+
+    def _backup_legacy(self, cache: CacheServer, step: int) -> None:
+        """Pre-datapath behaviour: second full cache.get + raw full send."""
+        dst = (cache.rank + 1) % len(self.caches)
+        shards = cache.get(step)
+        payload = {p: d for p, (sp, d) in shards.items()}
+        self.fabric.send(cache.rank, dst, payload)
+        self.caches[dst].put(step, shards, is_backup=True,
+                             owner_rank=cache.rank)
+        cache.mark(step, backed_up=True)
+
     def reconcile_once(self) -> None:
         self.passes += 1
         n = len(self.caches)
@@ -122,23 +267,27 @@ class Reconciler:
                 ent = cache.entry(step)
                 if ent is None or ent.is_backup:
                     continue
-                if not ent.persisted:
+                want_backup = (self.backup and self.fabric is not None
+                               and n > 1 and not ent.backed_up)
+                shards: Optional[NodeShards] = None
+                digmap: Optional[Dict[str, int]] = None
+                if not ent.persisted or want_backup:
+                    # one zero-copy view (and one digest pass) feeds both the
+                    # persist and the backup
+                    shards = cache.get(step)
+                    if shards is not None and not self.legacy:
+                        digmap = self._digest_map(cache, step, shards)
+                if not ent.persisted and shards is not None:
                     try:
-                        shards = cache.get(step)
-                        self.store.write_rank(step, cache.rank, shards)
-                        cache.mark(step, persisted=True)
+                        self._persist(cache, step, shards, digmap)
                     except Exception as e:
                         self.errors.append(f"persist r{cache.rank} s{step}: {e!r}")
-                if self.backup and self.fabric is not None and n > 1 \
-                        and not ent.backed_up:
-                    dst = (cache.rank + 1) % n
+                if want_backup and shards is not None:
                     try:
-                        shards = cache.get(step)
-                        payload = {p: d for p, (sp, d) in shards.items()}
-                        self.fabric.send(cache.rank, dst, payload)
-                        self.caches[dst].put(step, shards, is_backup=True,
-                                             owner_rank=cache.rank)
-                        cache.mark(step, backed_up=True)
+                        if self.legacy:
+                            self._backup_legacy(cache, step)
+                        else:
+                            self._backup(cache, step, shards, digmap)
                     except TransportError as e:
                         self.errors.append(f"backup r{cache.rank} s{step}: {e!r}")
                 ent = cache.entry(step)
@@ -146,8 +295,11 @@ class Reconciler:
                     persisted_steps[step] = persisted_steps.get(step, 0) + 1
         # commit manifests for fully-persisted steps (idempotent)
         with self._lock:
-            for step, cnt in persisted_steps.items():
+            for step, cnt in sorted(persisted_steps.items()):
                 if cnt >= n and step not in self._committed:
-                    self.store.commit(step, n)
+                    self.store.commit(step, n,
+                                      delta_base=self._last_committed
+                                      if self.delta else None)
                     self._committed.add(step)
+                    self._last_committed = step
                     self.durable_at[step] = self.clock.seconds

@@ -7,6 +7,11 @@ replication, so save volume matches Eq. (1) behaviour). Every shard carries
 ``(global_shape, axis, start, stop)`` so a checkpoint written on N nodes can be
 **resharded** and restored on M != N nodes (elastic shrink/grow — beyond-paper
 extension, see DESIGN.md §7).
+
+Zero-copy contract: ``shard_state`` never materialises shard bytes — every
+shard is a *view* into the caller's leaf (axis-0 slices of C-contiguous
+arrays stay contiguous). The single physical copy in the save path happens
+when ``CacheServer.put`` moves these views straight into arena slabs.
 """
 from __future__ import annotations
 
@@ -82,7 +87,13 @@ def unshard_state(node_shards: List[Optional[NodeShards]]
     for path, shards in pieces.items():
         spec0 = shards[0][0]
         if spec0.axis == -1:
-            out[path] = np.asarray(shards[0][1]).reshape(spec0.global_shape)
+            arr = np.asarray(shards[0][1])
+            if not arr.flags.writeable:
+                # cache-served shards are read-only arena views; the caller
+                # owns the restored state, so hand back a private copy (the
+                # sharded branch below copies implicitly via concatenate)
+                arr = arr.copy()
+            out[path] = arr.reshape(spec0.global_shape)
             continue
         shards.sort(key=lambda s: s[0].start)
         covered = 0

@@ -6,20 +6,40 @@ with the paper's measured network-attached-storage bandwidth (71.1 MB/s per
 rank on SenseCore file storage) on a modelled clock, so benchmarks can report
 paper-comparable save/load latencies while the bytes really move through the
 same code path.
+
+Datapath (this store is the tail of the zero-copy pipeline):
+
+* Shard payloads are written as raw byte files (``shard_*.bin``) straight
+  from arena views — no ``np.save`` header copies, no ``tobytes()``;
+  checksums are computed *streaming* over memoryviews.
+* **Delta checkpoints**: ``write_rank`` accepts ``refs`` — leaves unchanged
+  since an earlier persisted step are recorded as ``{"ref_step": S}`` index
+  entries pointing at the step whose file actually holds the bytes (refs are
+  path-compressed, so chain resolution is always one hop per leaf, however
+  long the manifest-level chain ``delta_base`` records). Only changed bytes
+  hit the NAS.
+* **Codecs**: payloads may be zlib (lossless, bit-exact) or int8
+  blockwise-quantised (Pallas kernel) — see :mod:`.codec`. The index stores
+  both the stored-payload crc (corruption detection) and the raw-content
+  digest (delta bookkeeping).
+
+``delete_step`` does not resolve inbound refs — deleting a step that later
+delta steps reference breaks them (the sim only deletes whole roots).
 """
 from __future__ import annotations
 
 import json
 import os
 import time
-import zlib
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.sim.clock import SimClock  # noqa: F401  (canonical clock; re-exported)
 
+from .codec import decode_shard, encode_shard, is_lossless_path
+from .fastcopy import METER, crc32_stream
 from .sharding import NodeShards, ShardSpec
 
 NAS_BW_PER_RANK = 71.1e6  # bytes/s — paper §IV-C: "roughly 71.1MB/s per rank"
@@ -123,47 +143,104 @@ class SharedBandwidth:
 
 
 class DiskStore:
-    """step -> {rank -> NodeShards}; manifest written last, atomically."""
+    """step -> {rank -> NodeShards}; manifest written last, atomically.
 
-    def __init__(self, root: str):
+    ``legacy_crc=True`` restores the pre-datapath full-buffer ``tobytes()``
+    checksum copies (for A/B benchmarking only).
+    """
+
+    def __init__(self, root: str, *, legacy_crc: bool = False):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.legacy_crc = legacy_crc
+        self.stats = {"bytes_stored": 0, "bytes_raw": 0, "leaves_written": 0,
+                      "leaves_ref": 0, "bytes_read_stored": 0}
 
     # -- paths ---------------------------------------------------------- #
     def _step_dir(self, step: int) -> Path:
         return self.root / f"step_{step:08d}"
 
+    def _rank_dir(self, step: int, rank: int) -> Path:
+        return self._step_dir(step) / f"rank_{rank:05d}"
+
     def _manifest(self, step: int) -> Path:
         return self._step_dir(step) / "manifest.json"
 
+    def _crc(self, data) -> int:
+        if self.legacy_crc:
+            import zlib
+            buf = (np.ascontiguousarray(data).tobytes()
+                   if isinstance(data, np.ndarray) else bytes(data))
+            METER.add(len(buf))              # the copy tobytes() materialises
+            return zlib.crc32(buf) & 0xFFFFFFFF
+        return crc32_stream(data)
+
     # -- write ---------------------------------------------------------- #
-    def write_rank(self, step: int, rank: int, shards: NodeShards) -> int:
-        """Persist one rank's shards. Returns bytes written."""
-        d = self._step_dir(step) / f"rank_{rank:05d}"
+    def write_rank(self, step: int, rank: int, shards: NodeShards, *,
+                   refs: Optional[Dict[str, Tuple[int, int]]] = None,
+                   digests: Optional[Dict[str, int]] = None,
+                   codec: str = "raw",
+                   lossless_paths: Tuple[str, ...] = ()) -> int:
+        """Persist one rank's shards. Returns bytes physically stored.
+
+        ``refs`` maps unchanged paths to ``(home_step, content_token)`` —
+        those leaves are recorded as index references instead of being
+        rewritten (``home_step`` is the step whose rank dir holds the actual
+        file). ``digests`` records the caller's content tokens for written
+        leaves (delta bookkeeping); absent, a crc of the raw bytes is stored.
+        """
+        d = self._rank_dir(step, rank)
         d.mkdir(parents=True, exist_ok=True)
-        total = 0
+        refs = refs or {}
+        stored_total = 0
+        raw_total = 0
         index = []
         for i, (path, (spec, data)) in enumerate(sorted(shards.items())):
             data = np.ascontiguousarray(data)
-            fname = f"shard_{i:05d}.npy"
+            raw_total += data.nbytes
+            ent = {"spec": spec.to_dict(), "dtype": str(data.dtype),
+                   "shape": list(data.shape), "nbytes_raw": int(data.nbytes)}
+            if path in refs:
+                home_step, digest = refs[path]
+                ent.update({"ref_step": int(home_step), "digest": int(digest)})
+                index.append(ent)
+                self.stats["leaves_ref"] += 1
+                continue
+            enc, payload, meta = encode_shard(
+                data, codec,
+                lossless=is_lossless_path(path, lossless_paths))
+            fname = f"shard_{i:05d}.bin"
             tmp = d / (fname + ".tmp")
             with open(tmp, "wb") as f:
-                np.save(f, data)
+                f.write(memoryview(payload))
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, d / fname)   # atomic
-            total += data.nbytes
-            index.append({"file": fname, "spec": spec.to_dict(),
-                          "crc32": int(zlib.crc32(data.tobytes()))})
+            stored_total += payload.nbytes
+            digest = (digests[path] if digests and path in digests
+                      else self._crc(data))
+            ent.update({"file": fname, "enc": enc, "meta": meta,
+                        "crc32": int(self._crc(payload)),
+                        "digest": int(digest),
+                        "nbytes_stored": int(payload.nbytes)})
+            index.append(ent)
+            self.stats["leaves_written"] += 1
         tmp = d / "index.json.tmp"
         tmp.write_text(json.dumps(index))
         os.replace(tmp, d / "index.json")
-        return total
+        self.stats["bytes_stored"] += stored_total
+        self.stats["bytes_raw"] += raw_total
+        return stored_total
 
-    def commit(self, step: int, n_ranks: int, meta: Optional[dict] = None) -> None:
-        """Write the manifest — the checkpoint becomes visible atomically."""
+    def commit(self, step: int, n_ranks: int, meta: Optional[dict] = None,
+               delta_base: Optional[int] = None) -> None:
+        """Write the manifest — the checkpoint becomes visible atomically.
+
+        ``delta_base`` chains this manifest to the previous durable step its
+        rank indexes may reference (informational; index refs are the
+        authoritative, path-compressed pointers)."""
         m = {"step": step, "n_ranks": n_ranks, "meta": meta or {},
-             "time": time.time()}
+             "delta_base": delta_base, "time": time.time()}
         tmp = self._manifest(step).with_suffix(".tmp")
         tmp.write_text(json.dumps(m))
         os.replace(tmp, self._manifest(step))
@@ -185,17 +262,56 @@ class DiskStore:
     def manifest(self, step: int) -> dict:
         return json.loads(self._manifest(step).read_text())
 
+    def rank_index(self, step: int, rank: int) -> List[dict]:
+        return json.loads((self._rank_dir(step, rank) / "index.json").read_text())
+
     def read_rank(self, step: int, rank: int, verify: bool = True) -> NodeShards:
-        d = self._step_dir(step) / f"rank_{rank:05d}"
-        index = json.loads((d / "index.json").read_text())
+        shards, _ = self._read_rank_impl(step, rank, verify)
+        return shards
+
+    def _read_rank_impl(self, step: int, rank: int,
+                        verify: bool = True) -> Tuple[NodeShards, int]:
+        """Read one rank's shards, resolving delta refs. Returns
+        ``(shards, stored_bytes_read)`` — the stored count is what a
+        bandwidth model should charge (refs read their home step's file)."""
+        index = self.rank_index(step, rank)
         out: NodeShards = {}
+        stored_read = 0
+        # steady-state delta checkpoints point many leaves at the same home
+        # step — parse each referenced index.json once, not once per leaf
+        home_indexes: Dict[int, Dict[str, dict]] = {}
+
+        def _home_index(home: int) -> Dict[str, dict]:
+            if home not in home_indexes:
+                home_indexes[home] = {e["spec"]["path"]: e
+                                      for e in self.rank_index(home, rank)}
+            return home_indexes[home]
+
         for ent in index:
             spec = ShardSpec.from_dict(ent["spec"])
-            data = np.load(d / ent["file"])
-            if verify and int(zlib.crc32(data.tobytes())) != ent["crc32"]:
+            home = step
+            hops = 0
+            resolved = ent
+            while "file" not in resolved:
+                home = int(resolved["ref_step"])
+                resolved = _home_index(home).get(spec.path)
+                if resolved is None:
+                    raise IOError(f"delta ref broken: {spec.path} missing "
+                                  f"from step {home} rank {rank}")
+                hops += 1
+                if hops > 64:
+                    raise IOError(f"delta ref cycle for {spec.path}")
+            fpath = self._rank_dir(home, rank) / resolved["file"]
+            payload = np.fromfile(fpath, np.uint8)
+            stored_read += payload.nbytes
+            if verify and int(self._crc(payload)) != resolved["crc32"]:
                 raise IOError(f"checksum mismatch for {spec.path} in rank {rank}")
+            data = decode_shard(resolved.get("enc", "raw"), payload,
+                                ent["dtype"], ent["shape"],
+                                resolved.get("meta"))
             out[spec.path] = (spec, data)
-        return out
+        self.stats["bytes_read_stored"] += stored_read
+        return out, stored_read
 
     def read_all(self, step: int) -> List[NodeShards]:
         m = self.manifest(step)
@@ -214,12 +330,17 @@ class NASStore(DiskStore):
     other jobs on the same NAS slow this store's saves and restores down.
     Without one, each transfer gets the full per-rank bandwidth (the
     historical single-job behaviour).
+
+    Transfers are charged on **stored** bytes — delta refs and compressed
+    payloads cut modelled NAS time proportionally, which is the point of the
+    datapath.
     """
 
     def __init__(self, root: str, bw_per_rank: float = NAS_BW_PER_RANK,
                  clock: Optional[SimClock] = None,
-                 arbiter: Optional[SharedBandwidth] = None):
-        super().__init__(root)
+                 arbiter: Optional[SharedBandwidth] = None, *,
+                 legacy_crc: bool = False):
+        super().__init__(root, legacy_crc=legacy_crc)
         self.bw = bw_per_rank
         self.clock = clock or SimClock()
         self.arbiter = arbiter
@@ -231,13 +352,13 @@ class NASStore(DiskStore):
         else:
             self.clock.advance(nbytes / self.bw)
 
-    def write_rank(self, step: int, rank: int, shards: NodeShards) -> int:
-        nbytes = super().write_rank(step, rank, shards)
+    def write_rank(self, step: int, rank: int, shards: NodeShards,
+                   **kw) -> int:
+        nbytes = super().write_rank(step, rank, shards, **kw)
         self._charge(nbytes, f"save_r{rank}")
         return nbytes
 
     def read_rank(self, step: int, rank: int, verify: bool = True) -> NodeShards:
-        out = super().read_rank(step, rank, verify)
-        nbytes = sum(d.nbytes for _, d in out.values())
-        self._charge(nbytes, f"restore_r{rank}")
+        out, stored_read = self._read_rank_impl(step, rank, verify)
+        self._charge(stored_read, f"restore_r{rank}")
         return out

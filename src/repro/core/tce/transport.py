@@ -20,6 +20,8 @@ import numpy as np
 from repro.sim.clock import SimClock
 from repro.sim.topology import Topology
 
+from .fastcopy import METER
+
 RDMA_BW = 4 * 200e9 / 8   # 4 NICs x 200 Gb/s -> 100 GB/s per node
 MEM_BW = 10e9             # local memory-cache write bandwidth (B_mem)
 
@@ -81,6 +83,7 @@ class Fabric:
             raise TransportError(f"destination node {dst} is down")
         nbytes = sum(np.asarray(v).nbytes for v in payload.values())
         out = {k: np.array(v, copy=True) for k, v in payload.items()}
+        METER.add(nbytes)                  # the receive-side materialisation
         self.clock.advance(nbytes / self.bw)
         with self._lock:
             self.transfers += 1

@@ -325,12 +325,9 @@ class TransomOperator:
         # stale rank-down markers from the old numbering must not carry over.
         for l in launchers:
             old.fabric.restore_node(l.rank)
+        import dataclasses
         self.tce = TCEngine(
-            TCEConfig(n_nodes=len(launchers),
-                      mem_limit_bytes=cfg.mem_limit_bytes,
-                      max_cycles=cfg.max_cycles, backup=cfg.backup,
-                      async_persist=cfg.async_persist,
-                      copy_threads=cfg.copy_threads, mem_bw=cfg.mem_bw),
+            dataclasses.replace(cfg, n_nodes=len(launchers)),
             old.store, fabric=old.fabric, clock=self.clock)
         # counters are cumulative job-level stats; restore_sources stays
         # per-restore (JobReport accumulates it across rebuilds)

@@ -110,7 +110,7 @@ def test_store_checksum_detects_corruption(tmp_path):
     state = {"w": np.ones((16,), np.float32)}
     store.write_rank(1, 0, shard_state(state, 1)[0])
     store.commit(1, 1)
-    f = next((tmp_path / "step_00000001" / "rank_00000").glob("shard_*.npy"))
+    f = next((tmp_path / "step_00000001" / "rank_00000").glob("shard_*.bin"))
     raw = bytearray(f.read_bytes())
     raw[-2] ^= 0xFF
     f.write_bytes(bytes(raw))
@@ -152,6 +152,22 @@ def test_cache_memory_cap_evicts_oldest():
     assert cache.arena.used <= 64 * 4096
     assert 10 not in cache.steps()
     assert cache.evictions > 0
+
+
+def test_cache_put_delta_shares_base_slabs():
+    """Ring-backup delta receives share unchanged leaves' slabs (refcounted)."""
+    cache = CacheServer(1, EvictionConfig(mem_limit_bytes=1 << 22,
+                                          max_cycles=100))
+    state = {"a": np.zeros((4096,), np.uint8), "b": np.ones((4096,), np.uint8)}
+    cache.put(10, shard_state(state, 1)[0], is_backup=True, owner_rank=0)
+    used_one = cache.arena.used
+    changed = shard_state({"b": np.full((4096,), 7, np.uint8)}, 1)[0]
+    stats = cache.put_delta(20, changed, 10, owner_rank=0)
+    assert stats.reused_leaves == 1 and stats.bytes_staged == 4096
+    assert cache.arena.used == used_one + 4096   # "a" shared, "b" staged
+    got = cache.get(20, owner_rank=0)
+    np.testing.assert_array_equal(got["a"][1], state["a"])
+    np.testing.assert_array_equal(got["b"][1], np.full((4096,), 7, np.uint8))
 
 
 # --------------------------------------------------------------------------- #
