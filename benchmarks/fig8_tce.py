@@ -107,6 +107,11 @@ def run_paper_models(verbose: bool = True):
             tce_wall = time.perf_counter() - t0          # training-visible stall
             tce_save_model = (h.modeled_cache_s / RANKS_PER_NODE * scale_up)
             h.wait(30)
+            # stop the reconciler so its async modelled charges (digest CPU)
+            # cannot land inside the measured restore window — even if
+            # h.wait() hit its timeout on a loaded host and left async
+            # durability work pending
+            eng.reconciler.stop()
             # measured restore: clock.seconds is what the waterfall charged
             # (cache reads at B_mem, nodes in parallel) — not a formula
             clock.reset()
@@ -269,6 +274,9 @@ def run_compression(verbose: bool = True):
                                      mem_limit_bytes=1 << 28, **cfg_kw),
                            store, clock=clock)
             state, stalls, handles = _drive_saves(eng)
+            # async charges (NAS + digest/encode CPU) must all land in the
+            # persist window, deterministically, even on a loaded host
+            eng.reconciler.stop()
             persist_s = clock.seconds     # NAS charges, summed over ranks
             stored = store.stats["bytes_stored"]
             raw = store.stats["bytes_raw"]

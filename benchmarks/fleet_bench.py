@@ -24,7 +24,8 @@ from repro.fleet.presets import run_preset
 # presets whose fleet-level utilization is gated (priority_preemption emits
 # a comparison report, not a single fleet report, and is gated separately)
 GATED_PRESETS = ("two_jobs_rack_outage", "spare_pool_starvation",
-                 "mixed_policy_fleet", "fleet_week_soak")
+                 "mixed_policy_fleet", "fleet_week_soak",
+                 "shrink_then_regrow")
 
 
 def nas_contention_micro(bw: float = 284.4e6, nbytes: float = 8e9) -> dict:

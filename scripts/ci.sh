@@ -32,6 +32,42 @@ python -m repro.fleet --run all --seed 0 --json "$TMP/fleet_b.json" > /dev/null
 diff "$TMP/fleet_a.json" "$TMP/fleet_b.json" \
     || { echo "FAIL: fleet scenario reports are nondeterministic" >&2; exit 1; }
 
+echo "== determinism gate: recovery planner decision logs (two runs) =="
+# the scenario/fleet diffs above already cover whole reports byte-for-byte;
+# this gate isolates the RecoveryPlanner's decision logs specifically, so a
+# planner nondeterminism bug is named as such instead of surfacing as a
+# generic report diff
+for run in a b; do
+    python - "$TMP/scen_$run.json" "$TMP/fleet_$run.json" \
+            "$TMP/dec_$run.json" <<'EOF'
+import json, sys
+out = {}
+for path in sys.argv[1:3]:
+    reports = json.load(open(path))
+    for rep in (reports if isinstance(reports, list) else [reports]):
+        if "decisions" in rep:
+            out[rep.get("scenario", rep.get("engine", "?"))] = rep["decisions"]
+assert out, "no decision logs found in scenario/fleet reports"
+json.dump(out, open(sys.argv[3], "w"), indent=1, sort_keys=True)
+EOF
+done
+diff "$TMP/dec_a.json" "$TMP/dec_b.json" \
+    || { echo "FAIL: planner decision logs are nondeterministic" >&2; exit 1; }
+
+echo "== one recovery brain: no policy logic left in engine files =="
+# the decision table lives in src/repro/recovery/ only; engines must not
+# re-grow their old shrink-vs-wait/refill conditionals (grep-verifiable)
+if grep -nE "allow_shrink and|shrink_threshold > 0 and len|assigned\) >= spec\.min_nodes" \
+        src/repro/sim/soak.py src/repro/fleet/engine.py \
+        src/repro/core/tol/orchestrator.py; then
+    echo "FAIL: engine file re-implements recovery policy" >&2; exit 1
+fi
+for f in src/repro/sim/soak.py src/repro/fleet/engine.py \
+        src/repro/core/tol/orchestrator.py; do
+    grep -q "planner" "$f" \
+        || { echo "FAIL: $f no longer routes through the planner" >&2; exit 1; }
+done
+
 echo "== bench regression gate: Fig. 6 sweep vs committed baseline =="
 python benchmarks/fig6_e2e.py --quiet --json "$TMP/BENCH_fig6.json"
 python scripts/bench_gate.py "$TMP/BENCH_fig6.json"

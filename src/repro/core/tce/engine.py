@@ -107,6 +107,13 @@ class TCEConfig:
     parallel_puts: bool = True        # per-rank cache puts/fetches on a pool
     delta: bool = True                # persist/backup only changed leaves
     codec: str = "raw"                # persist/backup payload: raw|zlib|int8
+    # async CPU accounting: digest + encode work in the reconciler charged
+    # to the modelled clock as bytes * cycles/byte / cpu_hz (historically
+    # only byte *transfers* were charged; the crc/compress CPU was free).
+    # ~3 cycles/byte ≈ software crc32 + copy on a ~2.5 GHz datacenter core.
+    # 0 disables the charge.
+    reconcile_cpu_cycles_per_byte: float = 3.0
+    reconcile_cpu_hz: float = 2.5e9
     # leaves matching these fnmatch patterns are never quantised (int8 codec
     # demotes them to lossless zlib) — optimizer-critical state stays exact
     lossless_paths: Tuple[str, ...] = ("*opt*", "*adam*", "*mu*", "*nu*",
@@ -159,11 +166,15 @@ class TCEngine:
         evict = EvictionConfig(cfg.mem_limit_bytes, cfg.max_cycles)
         self.caches = [CacheServer(r, evict, legacy=cfg.legacy_datapath)
                        for r in range(cfg.n_nodes)]
+        cpu_s_per_byte = (cfg.reconcile_cpu_cycles_per_byte
+                          / cfg.reconcile_cpu_hz
+                          if cfg.reconcile_cpu_hz > 0 else 0.0)
         self.reconciler = Reconciler(self.caches, store, self.fabric,
                                      backup=cfg.backup, clock=self.clock,
                                      delta=cfg.delta, codec=cfg.codec,
                                      lossless_paths=cfg.lossless_paths,
-                                     legacy=cfg.legacy_datapath)
+                                     legacy=cfg.legacy_datapath,
+                                     cpu_s_per_byte=cpu_s_per_byte)
         self._parallel = cfg.parallel_puts and not cfg.legacy_datapath \
             and cfg.n_nodes > 1
         self._pool = ThreadPoolExecutor(

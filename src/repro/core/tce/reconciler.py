@@ -46,7 +46,7 @@ class Reconciler:
                  clock: Optional[SimClock] = None,
                  delta: bool = True, codec: str = "raw",
                  lossless_paths: Tuple[str, ...] = (),
-                 legacy: bool = False):
+                 legacy: bool = False, cpu_s_per_byte: float = 0.0):
         self.caches = caches
         self.store = store
         self.fabric = fabric
@@ -56,6 +56,11 @@ class Reconciler:
         self.codec = codec if not legacy else "raw"
         self.lossless_paths = tuple(lossless_paths)
         self.legacy = legacy
+        # modelled digest/encode CPU seconds per byte processed (0: free).
+        # Charged only on *success* — a retried backup re-encodes for real,
+        # but charging per attempt would make modelled totals depend on
+        # thread timing and break report determinism.
+        self.cpu_s_per_byte = cpu_s_per_byte
         # shared substrate clock: durability timestamps land on the same
         # timeline as fabric transfers and TOL recovery phases
         self.clock = clock or getattr(fabric, "clock", None) \
@@ -74,7 +79,8 @@ class Reconciler:
         self.passes = 0
         self.stats = {"delta_leaves_skipped": 0, "delta_leaves_written": 0,
                       "backup_leaves_sent": 0, "backup_leaves_reused": 0,
-                      "backup_bytes_wire": 0}
+                      "backup_bytes_wire": 0, "cpu_bytes_charged": 0,
+                      "cpu_s_charged": 0.0}
 
     # ------------------------------------------------------------------ #
     def start(self) -> None:
@@ -141,6 +147,14 @@ class Reconciler:
                 self.errors.append(repr(e))
 
     # ------------------------------------------------------------------ #
+    def _charge_cpu(self, nbytes: int) -> None:
+        """Charge digest/encode CPU work to the modelled clock. Off the
+        training stall path by construction (the reconciler is async)."""
+        if self.cpu_s_per_byte > 0 and nbytes > 0:
+            self.stats["cpu_bytes_charged"] += int(nbytes)
+            self.stats["cpu_s_charged"] += nbytes * self.cpu_s_per_byte
+            self.clock.advance(nbytes * self.cpu_s_per_byte)
+
     def _digest_map(self, cache: CacheServer, step: int,
                     shards: NodeShards) -> Optional[Dict[str, int]]:
         """Per-leaf streaming crc32 over the entry's arena views — computed
@@ -153,6 +167,7 @@ class Reconciler:
             return {p: d for p, (d, _n, _s) in existing.items()}
         dig = {p: crc32_stream(d) for p, (sp, d) in shards.items()}
         cache.set_digests(step, dig)
+        self._charge_cpu(sum(d.nbytes for _, d in shards.values()))
         return dig
 
     def _persist(self, cache: CacheServer, step: int, shards: NodeShards,
@@ -168,6 +183,9 @@ class Reconciler:
         self.store.write_rank(step, rank, shards, refs=refs, digests=digmap,
                               codec=self.codec,
                               lossless_paths=self.lossless_paths)
+        if self.codec != "raw":
+            self._charge_cpu(sum(d.nbytes for p, (_sp, d) in shards.items()
+                                 if p not in refs))
         self.stats["delta_leaves_skipped"] += len(refs)
         self.stats["delta_leaves_written"] += len(shards) - len(refs)
         if self.delta and digmap:
@@ -220,6 +238,9 @@ class Reconciler:
                 dst_cache.put_delta(step, decoded, base_step,
                                     owner_rank=rank, is_backup=True,
                                     digests=digmap)
+                if self.codec != "raw":
+                    self._charge_cpu(sum(d.nbytes
+                                         for _sp, d in decoded.values()))
                 self.stats["backup_leaves_sent"] += sent
                 self.stats["backup_leaves_reused"] += reused
                 cache.mark(step, backed_up=True)
@@ -242,6 +263,8 @@ class Reconciler:
                 sent, reused = len(shards), 0
         dst_cache.put(step, decoded, is_backup=True, owner_rank=rank,
                       digests=digmap)
+        if self.codec != "raw":
+            self._charge_cpu(sum(d.nbytes for _sp, d in decoded.values()))
         self.stats["backup_leaves_sent"] += sent
         self.stats["backup_leaves_reused"] += reused
         cache.mark(step, backed_up=True)

@@ -156,6 +156,26 @@ class DiskStore:
         self.stats = {"bytes_stored": 0, "bytes_raw": 0, "leaves_written": 0,
                       "leaves_ref": 0, "bytes_read_stored": 0}
 
+    def namespace(self, job_id: str) -> "DiskStore":
+        """A per-job checkpoint namespace inside this shared store root.
+
+        Co-located fleet jobs write the same step keys; namespacing keeps
+        ``<root>/ns_<job>/step_*`` trees disjoint so they can never collide
+        on a step directory or overwrite each other's manifests. Subclasses
+        share their bandwidth model (one NAS under all namespaces)."""
+        import zlib as _zlib
+        safe = "".join(c if c.isalnum() or c in "-_." else "_"
+                       for c in job_id)
+        if safe != job_id:
+            # sanitisation must stay injective: "job/1" and "job:1" both
+            # map to "job_1", so disambiguate with a hash of the raw id
+            safe += f"-{_zlib.crc32(job_id.encode()) & 0xFFFFFFFF:08x}"
+        return type(self)(str(self.root / f"ns_{safe}"),
+                          **self._namespace_kwargs())
+
+    def _namespace_kwargs(self) -> dict:
+        return {"legacy_crc": self.legacy_crc}
+
     # -- paths ---------------------------------------------------------- #
     def _step_dir(self, step: int) -> Path:
         return self.root / f"step_{step:08d}"
@@ -344,6 +364,12 @@ class NASStore(DiskStore):
         self.bw = bw_per_rank
         self.clock = clock or SimClock()
         self.arbiter = arbiter
+
+    def _namespace_kwargs(self) -> dict:
+        # namespaces share the clock AND the arbiter: co-located jobs'
+        # saves/restores still contend for the one modelled NAS uplink
+        return {"bw_per_rank": self.bw, "clock": self.clock,
+                "arbiter": self.arbiter, "legacy_crc": self.legacy_crc}
 
     def _charge(self, nbytes: int, label: str) -> None:
         if self.arbiter is not None:

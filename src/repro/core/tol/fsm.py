@@ -6,6 +6,9 @@
 
 Transitions are validated against an explicit table; every transition is
 recorded (state history is what the unattended closed loop is audited by).
+With a shared :class:`~repro.sim.clock.SimClock` bound, history timestamps
+are deterministic *modelled* seconds on the substrate's one timeline;
+without one they fall back to wall clock (standalone use).
 """
 from __future__ import annotations
 
@@ -13,6 +16,8 @@ import enum
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.sim.clock import SimClock
 
 
 class JobState(enum.Enum):
@@ -48,15 +53,19 @@ class LauncherFSM:
     state: JobState = JobState.INIT
     history: List[Tuple[float, JobState, str]] = field(default_factory=list)
     on_enter: Dict[JobState, Callable] = field(default_factory=dict)
+    clock: Optional[SimClock] = None    # shared substrate clock, if any
 
     def __post_init__(self):
-        self.history.append((time.time(), self.state, "start"))
+        self.history.append((self._now(), self.state, "start"))
+
+    def _now(self) -> float:
+        return self.clock.seconds if self.clock is not None else time.time()
 
     def to(self, new: JobState, reason: str = "") -> None:
         if new not in _TRANSITIONS[self.state]:
             raise TransitionError(f"{self.state.value} -/-> {new.value} ({reason})")
         self.state = new
-        self.history.append((time.time(), new, reason))
+        self.history.append((self._now(), new, reason))
         hook = self.on_enter.get(new)
         if hook is not None:
             hook(reason)

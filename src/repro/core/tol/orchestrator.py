@@ -27,6 +27,9 @@ import numpy as np
 from repro.core.tce.engine import TCEngine, flatten_pytree, unflatten_like
 from repro.core.tee.service import TEEService
 from repro.core.tee.traces import TraceGenerator
+from repro.recovery import (REGROW, ClusterState, CostModel, Incident,
+                            RecoveryExecutor, RecoveryPlanner, fill_slots)
+from repro.recovery.executor import GAVE_UP
 from repro.sim.clock import SimClock
 
 from .cluster import ClusterSim, NodeState
@@ -89,6 +92,8 @@ class JobReport:
     state_history: List[Tuple[float, str, str]] = field(default_factory=list)
     lost_steps: int = 0
     tee_verdicts: int = 0
+    # the RecoveryPlanner's structured decision log for this job
+    decisions: List[dict] = field(default_factory=list)
     # accumulated across every recovery restore (survives elastic engine
     # rebuilds, which reset the engine's own stats)
     restore_sources: Dict[str, int] = field(default_factory=dict)
@@ -103,7 +108,8 @@ class TransomOperator:
     def __init__(self, server: TransomServer, cluster: ClusterSim,
                  tce: TCEngine, tee: Optional[TEEService] = None,
                  clock: Optional[SimClock] = None, verbose: bool = False,
-                 job_id: Optional[str] = None):
+                 job_id: Optional[str] = None,
+                 planner: Optional[RecoveryPlanner] = None):
         self.server = server
         self.cluster = cluster
         self.tce = tce
@@ -111,6 +117,9 @@ class TransomOperator:
         # one clock across the whole substrate: by default adopt the engine's
         # (which in turn adopted the fabric's / topology's / store's)
         self.clock = clock or tce.clock
+        # every recovery decision (replace vs shrink vs fail, regrow) routes
+        # through the shared cost-aware planner; engines keep mechanism only
+        self.planner = planner or RecoveryPlanner()
         self.verbose = verbose
         # claimant identity in the shared-topology lease ledger: per-job
         # operators on one fleet topology (repro.fleet.JobView) arbitrate
@@ -118,8 +127,10 @@ class TransomOperator:
         # already leased to a concurrent job
         self.job_id = (job_id or getattr(cluster, "job_id", None)
                        or getattr(cluster, "DEFAULT_CLAIMANT", "job0"))
+        self._step = 0      # deterministic step index for decision logs
         self.launchers: List[Launcher] = []
-        self.fsm = LauncherFSM()
+        # FSM audit history is stamped in deterministic sim-time
+        self.fsm = LauncherFSM(clock=self.clock)
 
     # ------------------------------------------------------------------ #
     def _log(self, msg: str) -> None:
@@ -152,6 +163,10 @@ class TransomOperator:
         """Run `total_steps` of `step_fn(state, step) -> state` under full
         TOL+TEE+TCE protection. `fault_hook(step)` may raise SimulatedFault."""
         report = JobReport(False, 0)
+        log_start = len(self.planner.log.entries)
+        # remembered for grow(): scenario hooks regrow mid-run and their
+        # decision-log entries must be priced with this job's costs
+        costs_cm = self._costs_cm = CostModel.from_phase_costs(cfg.costs)
         self._spawn_launchers(cfg.n_sim_nodes)
         state = init_state
         step = 0
@@ -168,6 +183,7 @@ class TransomOperator:
                     fault_hook(step)
                 state = step_fn(state, step)
                 step += 1
+                self._step = step
                 report.steps_done = step
                 if step % cfg.ckpt_every == 0:
                     self.tce.save(step, state)   # async: no training stall
@@ -235,35 +251,69 @@ class TransomOperator:
                         r = self.cluster.domain_of(n)
                         rack_hits[r] = rack_hits.get(r, 0) + 1
                 avoid_domains = {r for r, c in rack_hits.items() if c >= 2}
-                replaced = True
-                for l in list(self.launchers):
-                    if l.node in bad_nodes:
-                        new = self.cluster.schedule_replacement(
-                            self.server.bad_nodes(),
-                            avoid_domains=avoid_domains,
-                            claimant=self.job_id)
-                        if new is None:
-                            replaced = False
-                            break
-                        l.node = new
-                        self.cluster.bind_rank(l.rank, new)
-                        self.tce.node_recovered(l.rank)   # ring-backup pull
-                if not replaced:
-                    if cfg.allow_shrink and \
-                            len(self.launchers) - 1 >= cfg.min_nodes:
-                        # elastic shrink: drop the dead rank, reshard the
-                        # checkpoint engine onto the surviving nodes
-                        self._shrink(bad_nodes)
-                        report.shrinks += 1
-                        self._log(f"elastic shrink -> {len(self.launchers)} nodes")
-                    else:
-                        self.fsm.to(JobState.FAILED, "no replacement nodes")
-                        break
+                # replace-vs-shrink-vs-fail is the planner's call; this loop
+                # only executes the plan through the claim ledger
+                pending = [l for l in self.launchers if l.node in bad_nodes]
+                n_target = len(self.launchers)
+
+                def _cstate() -> ClusterState:
+                    return ClusterState(
+                        n_assigned=n_target - len(pending),
+                        n_target=n_target,
+                        min_nodes=cfg.min_nodes if cfg.allow_shrink
+                        else n_target,
+                        free_supply=self.cluster.claimable_supply(
+                            self.server.bad_nodes()))
+
+                def _claim() -> bool:
+                    new = self.cluster.schedule_replacement(
+                        self.server.bad_nodes(),
+                        avoid_domains=avoid_domains,
+                        claimant=self.job_id)
+                    if new is None:
+                        return False
+                    l = pending.pop(0)
+                    l.node = new
+                    self.cluster.bind_rank(l.rank, new)
+                    self.tce.node_recovered(l.rank)   # ring-backup pull
+                    return True
+
+                def _do_shrink() -> None:
+                    # elastic shrink: drop the dead ranks, reshard the
+                    # checkpoint engine onto the surviving nodes
+                    self._shrink(bad_nodes)
+                    report.shrinks += 1
+                    self._log(f"elastic shrink -> {len(self.launchers)} nodes")
+
+                outcome = fill_slots(
+                    self.planner,
+                    # closed-loop decision logs are step-indexed: the shared
+                    # clock is also advanced by the async reconciler thread,
+                    # so its mid-run reads are not deterministic — the step
+                    # counter is this engine's deterministic timeline
+                    Incident("fault", float(step),
+                             victims=tuple(sorted(bad_nodes)),
+                             categories=(pending_fault.category,)),
+                    _cstate,
+                    RecoveryExecutor(missing=lambda: len(pending),
+                                     try_claim=_claim,
+                                     do_shrink=_do_shrink),
+                    costs=costs_cm, job=self.job_id)
+                if outcome == GAVE_UP:
+                    self.fsm.to(JobState.FAILED, "no replacement nodes")
+                    break
                 self._elect()
                 t_down += cfg.costs.evict_reschedule + cfg.costs.restore_from_backup
                 report.restarts_resched += 1
             else:
                 self.fsm.to(JobState.RECOVER_INPLACE, "no bad node found")
+                self.planner.plan(
+                    Incident("fault", float(step),
+                             categories=(pending_fault.category,)),
+                    ClusterState(n_assigned=len(self.launchers),
+                                 n_target=len(self.launchers),
+                                 min_nodes=cfg.min_nodes),
+                    costs=costs_cm, job=self.job_id)
                 t_down += cfg.costs.inplace_restart + cfg.costs.restore_from_cache
                 report.restarts_inplace += 1
 
@@ -302,6 +352,7 @@ class TransomOperator:
             report.completed = True
         report.final_nodes = len(self.launchers)
         report.state_history = [(t, s.value, r) for t, s, r in self.fsm.history]
+        report.decisions = self.planner.log.entries[log_start:]
         return report, state
 
     def _rebuild_engine(self, launchers: List[Launcher]) -> None:
@@ -344,7 +395,20 @@ class TransomOperator:
         into the job and reshard the checkpoint ring onto the larger fleet.
 
         Safe to call between steps (e.g. from a scenario hook once repairs
-        complete). Returns how many nodes were actually added."""
+        complete). The regrow-vs-stay decision (pay a reshard now vs keep
+        running small) is the planner's; this method only executes the
+        claims. Returns how many nodes were actually added."""
+        plan = self.planner.plan_regrow(
+            ClusterState(
+                n_assigned=len(self.launchers),
+                n_target=len(self.launchers) + n_new,
+                min_nodes=len(self.launchers),
+                free_supply=self.cluster.claimable_supply(
+                    self.server.bad_nodes())),
+            t=float(self._step), job=self.job_id,
+            costs=getattr(self, "_costs_cm", None))
+        if plan.decision != REGROW:
+            return 0
         added: List[Launcher] = []
         for _ in range(n_new):
             new = self.cluster.schedule_replacement(self.server.bad_nodes(),

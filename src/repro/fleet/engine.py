@@ -33,6 +33,9 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.tce.store import NAS_BW_PER_RANK, SharedBandwidth
+from repro.recovery import (REGROW, ClusterState, CostModel, Incident,
+                            RecoveryExecutor, RecoveryPlanner, fill_slots)
+from repro.recovery.executor import WAITING as PLAN_WAITING
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.faults import (FaultEvent, FaultInjector, cascade_events,
                               domain_outage_schedule, merge_schedules,
@@ -74,6 +77,7 @@ class FleetConfig:
     rack_mtbf_days: float = 0.0
     horizon_days: float = 30.0
     scripted: Tuple[FaultEvent, ...] = ()        # deterministic extra events
+    planner_policy: str = "transom"              # RecoveryPlanner policy
     seed: int = 0
 
 
@@ -109,10 +113,12 @@ class _Job:
         self.downtime_s = 0.0
         self.restore_sources: Dict[str, int] = {}
         self.counts = dict(faults_hit=0, absorbed=0, domain_hits=0,
-                           shrinks=0, donations_given=0, donations_taken=0,
-                           waits=0, saves_started=0, saves_durable=0,
-                           saves_torn=0, saves_skipped=0)
+                           shrinks=0, regrows=0, donations_given=0,
+                           donations_taken=0, waits=0, saves_started=0,
+                           saves_durable=0, saves_torn=0, saves_skipped=0)
         self.wait_s = 0.0
+        # CostModel view of this job's policy for the shared planner
+        self.cost_model = CostModel.from_soak_policy(self.pol)
 
     @property
     def active(self) -> bool:
@@ -162,6 +168,10 @@ class _FleetRun:
                 self.topo, "rack", cfg.rack_mtbf_days, cfg.horizon_days,
                 seed=seed + 2))
         self.n_injected = push_schedule(self.events, schedule)
+        # ONE recovery brain across every job: claim-vs-preempt-vs-shrink-
+        # vs-wait and regrow-on-repair are planned here, per-job costs
+        # supplied per call; the engine below is mechanism only
+        self.planner = RecoveryPlanner(cfg.planner_policy)
         self.counts = dict(idle_faults=0, job_faults=0, preemptions=0)
         # (t, domain) -> set of job names hit by that correlated event
         self.correlated: Dict[Tuple[float, str], Set[str]] = {}
@@ -226,38 +236,80 @@ class _FleetRun:
             hits[r] = hits.get(r, 0) + 1
         return {r for r, c in hits.items() if c >= 2}
 
+    def _find_donor(self, spec) -> Optional[str]:
+        """Mechanism: the scheduler names the lowest-priority shrinkable job
+        among those not currently mid-recovery."""
+        if not self.cfg.preemption:
+            return None
+        donatable = {n for n, j in self.jobs.items()
+                     if j.state in (RUNNING, STALLED)}
+        return self.sched.find_donor(spec, self.specs, donatable)
+
     def _claim_replacements(self, job: _Job, t: float,
                             retrying: bool = False) -> None:
-        """Fill this recovery's open slots down the escalation ladder:
-        shared-pool claims first, then preemption of a lower-priority job,
-        then elastic shrink, else wait for repairs. Leaves the job in
-        RESCHEDULE or WAITING. ``retrying`` marks a re-attempt from the
-        WAITING state (wait bookkeeping continues instead of restarting)."""
+        """Fill this recovery's open slots — *mechanism only*; the
+        claim-vs-preempt-vs-shrink-vs-wait ladder is the shared
+        RecoveryPlanner's. Leaves the job in RESCHEDULE or WAITING.
+        ``retrying`` marks a re-attempt from the WAITING state (wait
+        bookkeeping continues instead of restarting)."""
         spec, view = job.spec, self._view(job)
         avoid = self._avoid_domains(job)
-        while job.pending_replace > 0:
+
+        def _cstate() -> ClusterState:
+            eta = self._next_repair()
+            return ClusterState(
+                n_assigned=len(view.assigned),
+                n_target=len(view.assigned) + job.pending_replace,
+                min_nodes=spec.min_nodes,
+                free_supply=self.topo.claimable_supply(),
+                donor_available=self._find_donor(spec) is not None,
+                repair_eta_s=max(eta - t, 0.0) if eta is not None else None,
+                wait_allowed=True,
+                has_ring_backup=job.pol.has_ring_backup,
+                topology_changed=job.escalate,
+                progress_at_risk_s=job.done - job.last_ckpt,
+                remaining_s=job.need - job.done)
+
+        def _claim() -> bool:
             got = self.sched.claim_replacement(spec.name, set(), avoid)
-            if got is not None:
-                job.pending_replace -= 1
-                continue
-            donor = None
-            if self.cfg.preemption:
-                donatable = {n for n, j in self.jobs.items()
-                             if j.state in (RUNNING, STALLED)}
-                donor = self.sched.find_donor(spec, self.specs, donatable)
-            if donor is not None:
-                self.sched.donate(donor, spec.name)
-                self._preempt_donor(self.jobs[donor], t)
-                job.counts["donations_taken"] += 1
-                self.counts["preemptions"] += 1
-                job.pending_replace -= 1
-                continue
-            if len(view.assigned) >= spec.min_nodes:
-                # run shrunk: the survivors reshard from the store
-                job.counts["shrinks"] += 1
-                job.escalate = True
-                job.pending_replace = 0
-                break
+            if got is None:
+                return False
+            job.pending_replace -= 1
+            return True
+
+        def _preempt() -> bool:
+            donor = self._find_donor(spec)
+            if donor is None:
+                return False
+            self.sched.donate(donor, spec.name)
+            self._preempt_donor(self.jobs[donor], t)
+            job.counts["donations_taken"] += 1
+            self.counts["preemptions"] += 1
+            job.pending_replace -= 1
+            return True
+
+        def _shrink() -> None:
+            # run shrunk: the survivors reshard from the store
+            job.counts["shrinks"] += 1
+            job.escalate = True
+            job.pending_replace = 0
+
+        # a parked recovery re-enters this ladder on every tick; scan supply
+        # and donors once here for the log gate (fill_slots' per-iteration
+        # _cstate re-scan stays — claims consume supply mid-fill) and only
+        # log the retries that can actually move
+        record = not retrying or self.topo.claimable_supply() > 0 \
+            or self._find_donor(spec) is not None
+        outcome = fill_slots(
+            self.planner,
+            Incident("retry" if retrying else "fault", t,
+                     mid_recovery_join=job.escalate),
+            _cstate,
+            RecoveryExecutor(missing=lambda: job.pending_replace,
+                             try_claim=_claim, try_preempt=_preempt,
+                             do_shrink=_shrink, do_wait=lambda: None),
+            costs=job.cost_model, job=spec.name, record=record)
+        if outcome == PLAN_WAITING:
             # below the elastic floor and the pool is dry: stall the
             # recovery until repairs land (or a donor frees up)
             job.state = WAITING
@@ -272,39 +324,80 @@ class _FleetRun:
         job.state = RESCHEDULE
         job.until = t + job.pol.evict_reschedule_s
 
+    def _open_planned_reshard(self, job: _Job, t: float) -> None:
+        """A planned topology change (preemption donation or regrow): roll
+        back to the last durable checkpoint and reshard through the store.
+        No detect phase — nothing failed."""
+        if job.save_flow is not None:
+            self.nas.cancel(job.save_flow[0])
+            job.save_flow = None
+            job.counts["saves_torn"] += 1
+        job.state = RESCHEDULE
+        job.inplace = False
+        job.escalate = True                 # reshard == store restore
+        job.recovery_t0 = t
+        job.pending_replace = 0
+        job.wait_s_in_open = 0.0
+        job.victim_racks = []
+        job.until = t + job.pol.evict_reschedule_s
+
     def _preempt_donor(self, donor: _Job, t: float) -> None:
-        """The donor lost a machine to a higher-priority job: roll back to
-        its last durable checkpoint and reshard through the store."""
-        if donor.save_flow is not None:
-            self.nas.cancel(donor.save_flow[0])
-            donor.save_flow = None
-            donor.counts["saves_torn"] += 1
+        """The donor lost a machine to a higher-priority job."""
         donor.counts["donations_given"] += 1
-        donor.state = RESCHEDULE            # planned: no detect phase
-        donor.inplace = False
-        donor.escalate = True               # reshard == store restore
-        donor.recovery_t0 = t
-        donor.pending_replace = 0
-        donor.wait_s_in_open = 0.0
-        donor.victim_racks = []
-        donor.until = t + donor.pol.evict_reschedule_s
+        self._open_planned_reshard(donor, t)
+
+    def _maybe_regrow(self, t: float) -> None:
+        """Repairs landed or capacity freed: shrunken RUNNING jobs reclaim
+        machines, highest priority first, whenever the planner scores the
+        reshard (rollback + store restore) cheaper than the throughput still
+        being lost while degraded. This is the regrow-on-repair rung fleet
+        jobs historically never took (they stayed shrunk for life)."""
+        shrunk = [j for j in self.jobs.values()
+                  if j.state == RUNNING and j.spec.name in self.sched.views
+                  and len(self._view(j).assigned) < j.spec.n_nodes]
+        for job in sorted(shrunk,
+                          key=lambda j: (-j.spec.priority,
+                                         self.sched.submit_order(
+                                             j.spec.name))):
+            spec, view = job.spec, self._view(job)
+            supply = self.topo.claimable_supply()
+            if supply <= 0:
+                return
+            plan = self.planner.plan_regrow(
+                ClusterState(
+                    n_assigned=len(view.assigned), n_target=spec.n_nodes,
+                    min_nodes=spec.min_nodes, free_supply=supply,
+                    progress_at_risk_s=job.done - job.last_ckpt,
+                    remaining_s=job.need - job.done),
+                t=t, costs=job.cost_model, job=spec.name)
+            if plan.decision != REGROW:
+                continue
+            got = 0
+            while len(view.assigned) < spec.n_nodes and \
+                    self.sched.claim_replacement(spec.name, set(), ()) \
+                    is not None:
+                got += 1
+            if got:
+                job.counts["regrows"] += 1
+                self._open_planned_reshard(job, t)
 
     def _start_restore(self, job: _Job, t: float) -> None:
         job.state = RESTORE
         pol = job.pol
-        if job.escalate or not pol.has_ring_backup:
+        # which TCE waterfall leg serves this restore is the planner's call
+        job.restore_src = self.planner.choose_restore_source(
+            inplace=job.inplace, escalated=job.escalate,
+            has_ring_backup=pol.has_ring_backup)
+        if job.restore_src == "store_full":
             # reshard / double-fault / no-ring-backup policy: the restore
             # pulls the full checkpoint through the shared NAS (a flow that
             # contends with every other job's saves and restores)
-            job.restore_src = "store_full"
             job.until = math.inf        # ends when the NAS flow drains
             job.restore_flow = self.nas.start(
                 t, job.spec.ckpt_bytes, f"{job.spec.name}:restore")
-        elif job.inplace:
-            job.restore_src = "cache"
+        elif job.restore_src == "cache":
             job.until = t + pol.inplace_restart_s + pol.restore_cache_s
         else:
-            job.restore_src = "backup"
             job.until = t + pol.restore_backup_s
 
     def _close_recovery(self, job: _Job, t: float) -> None:
@@ -454,7 +547,12 @@ class _FleetRun:
                                      for j in self.jobs.values())
             for job in self.jobs.values():
                 if job.state == RUNNING:
-                    r = job.rate(self._view(job))
+                    view = self._view(job)
+                    if len(view.assigned) < job.spec.n_nodes:
+                        # shrunken job: wake at the next repair so the
+                        # planner can take the regrow-on-repair rung
+                        waiting_or_pending = True
+                    r = job.rate(view)
                     if r > 0:
                         cands.append(
                             t_now + max(self._marker(job) - job.done, 0.0) / r)
@@ -490,6 +588,9 @@ class _FleetRun:
         for job in self.jobs.values():
             if job.state == WAITING:
                 self._retry_waiting(job, t)
+        # regrow runs after parked recoveries retried (a below-floor recovery
+        # outranks a comfort regrow) and before new admissions (_try_admit)
+        self._maybe_regrow(t)
         for job in self.jobs.values():
             if job.state == RUNNING and job.done >= self._marker(job) - _EPS:
                 self._at_marker(job, t)
@@ -534,6 +635,7 @@ class _FleetRun:
             "preemption": {"donations_given": job.counts["donations_given"],
                            "donations_taken": job.counts["donations_taken"]},
             "shrinks": job.counts["shrinks"],
+            "regrows": job.counts["regrows"],
         }
 
     def _report(self) -> dict:
@@ -577,6 +679,9 @@ class _FleetRun:
             "correlated_events": correlated,
             "jobs": {name: self._job_report(j)
                      for name, j in sorted(self.jobs.items())},
+            # the shared RecoveryPlanner's structured decision log (every
+            # job's recoveries interleaved on the one fleet timeline)
+            "decisions": self.planner.log.to_report(cap=100),
             "one_clock": (self.topo.clock is self.clock
                           and self.events.clock is self.clock),
         }

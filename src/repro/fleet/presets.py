@@ -121,6 +121,31 @@ def spare_pool_starvation(seed: int = 0) -> dict:
                 pool_contended=sched["claims_denied"] > 0)
 
 
+@preset("shrink_then_regrow",
+        "An elastic job loses a node with the pool dry and shrinks; when "
+        "the repair lands the RecoveryPlanner takes the regrow rung — the "
+        "job pays a planned reshard and finishes at full strength (the "
+        "whole arc is visible in the deterministic decision log).")
+def shrink_then_regrow(seed: int = 0) -> dict:
+    crash = (FaultEvent(3600.0, "node0002", "node_hw",
+                        degrades_only=False),)
+    cfg = FleetConfig(
+        jobs=(_job("elastic", n_nodes=4, min_nodes=2, ideal_hours=12.0),),
+        n_nodes=4, n_spares=0, repair_hours=2.0,
+        scripted=crash, seed=seed)
+    rep = run_fleet(cfg, seed=seed)
+    j = rep["jobs"]["elastic"]
+    decisions = [e["decision"] for e in rep["decisions"]["log"]]
+    return dict(rep, scenario="shrink_then_regrow",
+                decision_arc=decisions,
+                shrank_then_regrew=(j["shrinks"] >= 1 and j["regrows"] >= 1
+                                    and decisions.index("shrink")
+                                    < decisions.index("regrow")
+                                    if {"shrink", "regrow"} <=
+                                    set(decisions) else False),
+                finished_full_strength=j["final_nodes"] == 4)
+
+
 @preset("fleet_week_soak",
         "The soak engine's multi-job mode: three mixed-priority jobs share "
         "16 nodes for days of modelled training under the Table-I mix plus "

@@ -9,8 +9,11 @@ One :class:`FleetScheduler` owns admission onto a shared multi-job
   submission order, and are re-considered whenever capacity frees up
   (job completion, repairs landing);
 * **preemption donors** — when a high-priority job's recovery finds the
-  shared spare pool dry, the scheduler names the lowest-priority running job
-  that can be elastically shrunk to donate a machine.
+  shared spare pool dry, the scheduler *names* the lowest-priority running
+  job that can be elastically shrunk to donate a machine. Whether to take
+  that rung at all is not decided here: the shared
+  :class:`repro.recovery.RecoveryPlanner` owns the claim-vs-preempt-vs-
+  shrink-vs-wait decision; this scheduler is pure mechanism.
 
 The scheduler only moves leases; modelled time, recovery costs and fault
 handling live in :mod:`repro.fleet.engine`.
@@ -76,6 +79,11 @@ class FleetScheduler:
 
     def _queue_key(self, spec: JobSpec):
         return (-spec.priority, self._submit_order[spec.name])
+
+    def submit_order(self, name: str) -> int:
+        """Submission index of a job — the deterministic tie-break the
+        engine's regrow pass shares with admission ordering."""
+        return self._submit_order.get(name, 0)
 
     def try_admit(self) -> List[JobSpec]:
         """Admit every pending job whose full gang fits, highest priority

@@ -80,6 +80,10 @@ class JobView:
             self.assigned.append(name)
         return name
 
+    def claimable_supply(self, anti_affinity: Set[str] = frozenset()) -> int:
+        """Shared-pool supply visible to this job's planner snapshot."""
+        return self.topo.claimable_supply(anti_affinity)
+
     def bad_assigned_nodes(self) -> List[str]:
         return [n for n in self.assigned
                 if self.topo.nodes[n].state in (NodeState.FAILED,

@@ -172,6 +172,10 @@ def _run_closed_loop(sub: Substrate, steps: int, ckpt_every: int,
 def _report_dict(name: str, seed: int, sub: Substrate, report,
                  extra: Optional[dict] = None) -> dict:
     tce = sub.operator.tce    # may have been rebuilt by shrink/grow
+    # drain the async durability pipeline first: its modelled charges
+    # (NAS writes, digest/encode CPU) must land before clock_s is read,
+    # or the report would race the reconciler thread
+    tce.reconciler.quiesce(10)
     out = {
         "scenario": name,
         "seed": seed,
@@ -197,6 +201,9 @@ def _report_dict(name: str, seed: int, sub: Substrate, report,
                    "bytes_moved": tce.fabric.bytes_moved},
         "clock_s": round(sub.clock.seconds, 3),
         "fsm_path": [s for _, s, _ in report.state_history],
+        # the RecoveryPlanner's structured decision log (closed-loop entries
+        # are step-indexed: `t` is the step the incident interrupted)
+        "decisions": {"n": len(report.decisions), "log": report.decisions},
         "one_clock": sub.clock_identity_ok(),
     }
     if extra:

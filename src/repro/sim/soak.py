@@ -35,6 +35,9 @@ from typing import Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.recovery import (ClusterState, CostModel, Incident,
+                            RecoveryExecutor, RecoveryPlanner, fill_slots)
+
 from .clock import EventQueue, SimClock
 from .faults import (FaultEvent, FaultInjector, cascade_events,
                      domain_outage_schedule, merge_schedules, push_schedule)
@@ -110,6 +113,7 @@ class SoakConfig:
     step_time_s: float = 30.0         # one training step, for lost_steps
     horizon_factor: float = 8.0       # fault schedule length vs ideal_days
     policy: SoakPolicy = transom_policy()
+    planner_policy: str = "transom"   # RecoveryPlanner decision policy
     seed: int = 0
 
 
@@ -142,6 +146,10 @@ class _SoakRun:
                 seed=seed + 2))
         self.events = EventQueue(self.clock)
         self.n_injected = push_schedule(self.events, schedule)
+        # ONE recovery brain: every shrink-vs-wait/refill decision routes
+        # through the shared cost-aware planner (this engine keeps mechanism)
+        self.planner = RecoveryPlanner(
+            cfg.planner_policy, costs=CostModel.from_soak_policy(self.pol))
 
         self.need = cfg.ideal_days * DAY_S   # productive full-fleet seconds
         self.done = 0.0
@@ -235,26 +243,47 @@ class _SoakRun:
         rs = set(ranks)
         return any((r + 1) % n in rs for r in ranks)
 
-    def _refill(self, avoid: Set[str], victims: Set[str]) -> None:
-        """Bring the fleet back to full strength: spares first, then repaired
-        machines; when the pool is dry either shrink (policy allows and
-        enough survivors) or stall the recovery until the next repair."""
-        cfg = self.cfg
+    def _refill(self, avoid: Set[str], victims: Set[str],
+                incident: Incident) -> None:
+        """Bring the fleet back to full strength — *mechanism only*. The
+        claim-vs-shrink-vs-wait choice is the shared RecoveryPlanner's; this
+        method executes the planned ladder through the topology's claim API
+        (spares first, then repaired machines) and the event queue (waits
+        absorb faults into the open transaction)."""
+        cfg, topo = self.cfg, self.topo
         floor = max(1, math.ceil(cfg.shrink_threshold * cfg.n_nodes))
-        while len(self.topo.assigned) < cfg.n_nodes:
-            self.topo.repair_due(self.clock.seconds)
-            if self.topo.schedule_replacement(set(), avoid_domains=avoid) \
-                    is not None:
-                continue
-            if cfg.shrink_threshold > 0 and len(self.topo.assigned) >= floor:
-                self.counts["shrinks"] += 1
-                return
+
+        def _cstate() -> ClusterState:
+            topo.repair_due(self.clock.seconds)
+            return ClusterState(
+                n_assigned=len(topo.assigned),
+                n_target=cfg.n_nodes,
+                min_nodes=floor if cfg.shrink_threshold > 0 else cfg.n_nodes,
+                free_supply=topo.claimable_supply(),
+                repair_eta_s=self._next_repair_wait(),
+                has_ring_backup=self.pol.has_ring_backup,
+                progress_at_risk_s=self.done - self.last_ckpt)
+
+        def _claim() -> bool:
+            return topo.schedule_replacement(set(), avoid_domains=avoid) \
+                is not None
+
+        def _shrink() -> None:
+            self.counts["shrinks"] += 1
+
+        def _wait() -> Optional[bool]:
             wait = self._next_repair_wait()
             if wait is None:
-                return
+                return False
             self.counts["waits_for_repair"] += 1
             self.wait_s += wait
             self._absorb(wait, victims)
+            return True
+
+        fill_slots(self.planner, incident, _cstate,
+                   RecoveryExecutor(
+                       missing=lambda: cfg.n_nodes - len(topo.assigned),
+                       try_claim=_claim, do_shrink=_shrink, do_wait=_wait))
 
     def _next_repair_wait(self) -> Optional[float]:
         due = [n.repair_at for n in self.topo.nodes.values()
@@ -288,23 +317,36 @@ class _SoakRun:
             if processed:
                 mid_restore_join = True
             processed |= set(fresh)
-            self._refill(avoid, victims)
+            self._refill(avoid, victims,
+                         Incident("fault", self.clock.seconds,
+                                  victims=tuple(fresh),
+                                  mid_recovery_join=mid_restore_join,
+                                  ring_adjacent=adjacent))
             self._absorb(pol.evict_reschedule_s, victims)
 
         if not processed:                         # in-place restart
-            source, cost = "cache", pol.restore_cache_s
+            self.planner.plan(
+                Incident("fault", self.clock.seconds),
+                ClusterState(n_assigned=len(topo.assigned),
+                             n_target=len(topo.assigned), min_nodes=1,
+                             has_ring_backup=pol.has_ring_backup,
+                             progress_at_risk_s=self.done - self.last_ckpt))
+            source = self.planner.choose_restore_source(
+                inplace=True, escalated=False,
+                has_ring_backup=pol.has_ring_backup)
             self.clock.advance(pol.inplace_restart_s)
         else:
             n_after = len(topo.assigned)
             if n_after > n_prev:
                 self.counts["regrows"] += 1
-            if (mid_restore_join or adjacent or n_after != n_prev
-                    or not pol.has_ring_backup):
-                source, cost = "store_full", pol.restore_store_s
-            else:
-                source, cost = "backup", pol.restore_backup_s
-        if not pol.has_ring_backup:               # no caches either: NAS only
-            source, cost = "store_full", pol.restore_store_s
+            # which waterfall leg serves this restore is the planner's call
+            source = self.planner.choose_restore_source(
+                inplace=False,
+                escalated=(mid_restore_join or adjacent
+                           or n_after != n_prev),
+                has_ring_backup=pol.has_ring_backup)
+        # one cost table: the same CostModel the planner scored with
+        cost = self.planner.costs.restore_s(source)
         self.clock.advance(cost + pol.warmup_s)
         topo.rebind_ranks(list(topo.assigned))
         self.ring_n = max(len(topo.assigned), 1)
@@ -349,7 +391,8 @@ class _SoakRun:
                 victims: Set[str] = set()
                 self._absorb(wait, victims)
                 self.topo.repair_due(clock.seconds)
-                self._refill(set(), victims)
+                self._refill(set(), victims,
+                             Incident("repair", clock.seconds))
                 self.topo.rebind_ranks(list(self.topo.assigned))
                 self.ring_n = max(len(self.topo.assigned), 1)
                 continue
@@ -420,6 +463,9 @@ class _SoakRun:
                 "regrows": c["regrows"],
                 "final_active": len(self.topo.assigned),
             },
+            # the RecoveryPlanner's structured decision log (full counts,
+            # entries capped deterministically to bound sweep artifacts)
+            "decisions": self.planner.log.to_report(cap=40),
             "one_clock": (self.topo.clock is self.clock
                           and self.events.clock is self.clock),
         }

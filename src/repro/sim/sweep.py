@@ -75,6 +75,13 @@ def run_point(ckpt_cadence_s: float, spare_pool: int,
                      policy=transom_policy(ckpt_cadence_s), seed=seed)
     transom = run_soak(cfg)
     baseline = run_soak(replace(cfg, policy=manual_policy()))
+    for rep in (transom, baseline):
+        # keep the planner's decision *counts* per point; the full entry
+        # log (5 scored candidates per decision) belongs to standalone soak
+        # reports — embedded verbatim across a 48-point grid it would bloat
+        # the committed bench baselines by thousands of lines
+        rep["decisions"] = {k: v for k, v in rep["decisions"].items()
+                            if k != "log"}
     t_days, b_days = transom["end_to_end_days"], baseline["end_to_end_days"]
     return {
         "policy": {

@@ -203,6 +203,15 @@ class Topology:
                       and n.name not in self._leases
                       and n.name not in self.assigned)
 
+    def claimable_supply(self, anti_affinity: Iterable[str] = ()) -> int:
+        """How many machines :meth:`claim_replacement` could grant right now
+        (healthy spares plus healthy unleased nodes outside the anti-affinity
+        set). Read-only: the RecoveryPlanner's supply snapshot."""
+        bad = set(anti_affinity)
+        return (sum(1 for sp in self.spares
+                    if sp.state == NodeState.HEALTHY and sp.name not in bad)
+                + sum(1 for n in self.free_nodes() if n not in bad))
+
     def claim_specific(self, name: str, claimant: str) -> str:
         """Gang scheduling: claim one named free healthy node atomically."""
         with self._lock:

@@ -198,12 +198,14 @@ def test_nas_store_slows_down_under_contention(tmp_path):
 # --------------------------------------------------------------------------- #
 # two per-job TransomOperators on ONE shared topology
 # --------------------------------------------------------------------------- #
-def _mini_stack(view, clock, tmp, n_nodes):
-    from repro.core.tce import NASStore as _NAS, TCEConfig, TCEngine
+def _mini_stack(view, clock, shared_store, n_nodes):
+    from repro.core.tce import TCEConfig, TCEngine
     from repro.core.tce.transport import Fabric
     from repro.core.tol import TransomOperator, TransomServer
 
-    store = _NAS(tmp, clock=clock)
+    # co-located jobs write the same step keys into ONE shared store root:
+    # per-job namespaces keep them collision-free
+    store = shared_store.namespace(view.job_id)
     fabric = Fabric(clock=clock, topology=view)
     tce = TCEngine(TCEConfig(n_nodes=n_nodes), store, fabric=fabric,
                    clock=clock, topology=view)
@@ -212,6 +214,7 @@ def _mini_stack(view, clock, tmp, n_nodes):
 
 
 def test_two_operators_share_topology_without_node_overlap(tmp_path):
+    from repro.core.tce import NASStore as _NAS
     from repro.core.tol import JobConfig
     from repro.core.tol.orchestrator import SimulatedFault
 
@@ -221,8 +224,9 @@ def test_two_operators_share_topology_without_node_overlap(tmp_path):
     va = sched.submit(JobSpec("jobA", 2))
     vb = sched.submit(JobSpec("jobB", 2))
     assert va is not None and vb is not None
-    op_a = _mini_stack(va, clock, str(tmp_path / "a"), 2)
-    op_b = _mini_stack(vb, clock, str(tmp_path / "b"), 2)
+    shared = _NAS(str(tmp_path), clock=clock)
+    op_a = _mini_stack(va, clock, shared, 2)
+    op_b = _mini_stack(vb, clock, shared, 2)
     assert op_a.job_id == "jobA" and op_b.job_id == "jobB"
 
     state = {"w": __import__("numpy").zeros(8, "float32")}
@@ -250,6 +254,13 @@ def test_two_operators_share_topology_without_node_overlap(tmp_path):
     assert not set(va.assigned) & set(vb.assigned)
     assert {topo.owner_of(n) for n in va.assigned} == {"jobA"}
     assert {topo.owner_of(n) for n in vb.assigned} == {"jobB"}
+    # both jobs wrote the same step keys into one shared root, namespaced
+    # apart — identical step sets, zero collisions
+    op_a.tce.reconciler.quiesce(10)
+    op_b.tce.reconciler.quiesce(10)
+    assert sorted(p.name for p in tmp_path.iterdir() if p.is_dir()) == \
+        ["ns_jobA", "ns_jobB"]
+    assert op_a.tce.store.steps() == op_b.tce.store.steps() != []
     op_a.tce.close()
     op_b.tce.close()
 

@@ -1,0 +1,463 @@
+"""One recovery brain: the shared cost-aware RecoveryPlanner.
+
+Golden decision-table tests (one incident matrix -> expected plan per
+policy), the restore-source chooser, the fill_slots executor protocol, the
+fleet regrow-after-repair path the planner unlocked, deterministic decision
+logs across all three engines, sim-time FSM history, per-job checkpoint
+namespaces and the reconciler's modelled digest/encode CPU charge.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.recovery import (CLAIM_SPARE, GIVE_UP, PREEMPT_DONOR,
+                            RECOVER_IN_PLACE, REGROW, SHRINK, STAY_SHRUNK,
+                            WAIT_FOR_REPAIR, ClusterState, CostModel,
+                            Incident, RecoveryExecutor, RecoveryPlanner,
+                            fill_slots)
+
+
+# --------------------------------------------------------------------------- #
+# golden decision table: one incident matrix -> expected plan per policy
+# --------------------------------------------------------------------------- #
+def _st(**kw):
+    base = dict(n_assigned=3, n_target=4, min_nodes=2, free_supply=0)
+    base.update(kw)
+    return ClusterState(**base)
+
+
+# (name, incident, state, {policy: expected decision})
+MATRIX = [
+    ("no_victim_inplace",
+     Incident("fault"), _st(n_assigned=4),
+     {"transom": RECOVER_IN_PLACE, "cost": RECOVER_IN_PLACE,
+      "no_shrink": RECOVER_IN_PLACE}),
+    ("spare_covers",
+     Incident("fault", victims=("node0001",)), _st(free_supply=2),
+     {"transom": CLAIM_SPARE, "cost": CLAIM_SPARE,
+      "no_shrink": CLAIM_SPARE}),
+    ("pool_dry_donor_available",
+     Incident("fault", victims=("node0001",)),
+     _st(donor_available=True, repair_eta_s=4 * 3600.0),
+     {"transom": PREEMPT_DONOR, "cost": PREEMPT_DONOR,
+      "no_shrink": PREEMPT_DONOR}),
+    ("pool_dry_above_floor",
+     Incident("fault", victims=("node0001",)),
+     _st(repair_eta_s=24 * 3600.0),
+     {"transom": SHRINK, "cost": SHRINK, "no_shrink": WAIT_FOR_REPAIR}),
+    # a repair landing in minutes beats a degraded day even for "cost"
+    ("pool_dry_repair_imminent",
+     Incident("fault", victims=("node0001",)), _st(repair_eta_s=60.0),
+     {"transom": SHRINK, "cost": WAIT_FOR_REPAIR,
+      "no_shrink": WAIT_FOR_REPAIR}),
+    ("below_floor_waits",
+     Incident("fault", victims=("node0001", "node0002")),
+     _st(n_assigned=1, repair_eta_s=3600.0),
+     {"transom": WAIT_FOR_REPAIR, "cost": WAIT_FOR_REPAIR,
+      "no_shrink": WAIT_FOR_REPAIR}),
+    ("nothing_feasible",
+     Incident("fault", victims=("node0001",)),
+     _st(min_nodes=4),
+     {"transom": GIVE_UP, "cost": GIVE_UP, "no_shrink": GIVE_UP}),
+]
+
+
+@pytest.mark.parametrize("policy", ["transom", "cost", "no_shrink"])
+@pytest.mark.parametrize("name,incident,state,expect",
+                         MATRIX, ids=[m[0] for m in MATRIX])
+def test_golden_decision_table(name, incident, state, expect, policy):
+    planner = RecoveryPlanner(policy)
+    plan = planner.plan(incident, state)
+    assert plan.decision == expect[policy], \
+        f"{name}/{policy}: wanted {expect[policy]}, got {plan.decision}"
+    # every plan logs a structured, JSON-able entry with scored candidates
+    entry = planner.log.entries[-1]
+    json.dumps(entry)
+    assert entry["decision"] == plan.decision
+    assert {c["action"] for c in entry["candidates"]} >= {plan.decision} \
+        or plan.decision == GIVE_UP
+
+
+def test_cost_policy_orders_ladder_by_score():
+    planner = RecoveryPlanner("cost")
+    # long repair ETA: waiting is the most expensive feasible rung
+    plan = planner.plan(Incident("fault", victims=("n1",)),
+                       _st(free_supply=1, donor_available=True,
+                           repair_eta_s=24 * 3600.0))
+    costs = {c.action: c.cost_s for c in plan.candidates if c.feasible}
+    assert list(plan.ladder) == sorted(plan.ladder, key=lambda a: costs[a])
+    assert plan.ladder[0] == CLAIM_SPARE   # cheapest: no donor penalty
+
+
+def test_regrow_is_cost_aware():
+    planner = RecoveryPlanner()
+    # plenty of work left: the reshard pays for itself -> regrow
+    plan = planner.plan_regrow(
+        _st(free_supply=1, remaining_s=3 * 24 * 3600.0,
+            progress_at_risk_s=900.0))
+    assert plan.decision == REGROW
+    assert plan.restore_source == "store_full"
+    # nearly done: rolling back costs more than the remaining slowdown
+    plan = planner.plan_regrow(
+        _st(free_supply=1, remaining_s=60.0, progress_at_risk_s=1700.0))
+    assert plan.decision == STAY_SHRUNK
+    # nothing claimable: nothing to decide
+    plan = planner.plan_regrow(_st(free_supply=0, remaining_s=1e6))
+    assert plan.decision == STAY_SHRUNK
+    # remaining work unknown (closed-loop grow()): assume open-ended benefit
+    plan = planner.plan_regrow(_st(free_supply=1))
+    assert plan.decision == REGROW
+
+
+def test_restore_source_decision_table():
+    ch = RecoveryPlanner.choose_restore_source
+    assert ch(inplace=True, escalated=False) == "cache"
+    assert ch(inplace=False, escalated=False) == "backup"
+    assert ch(inplace=False, escalated=True) == "store_full"
+    # an in-place recovery that a second fault escalated mid-flight
+    assert ch(inplace=True, escalated=True) == "store_full"
+    # manual baseline: no ring backup, everything hits the store
+    for inplace in (True, False):
+        assert ch(inplace=inplace, escalated=False,
+                  has_ring_backup=False) == "store_full"
+
+
+# --------------------------------------------------------------------------- #
+# fill_slots executor protocol
+# --------------------------------------------------------------------------- #
+def _exec_harness(supply, can_wait_repairs=0):
+    """A toy engine: `supply` claimable machines, then optional repairs."""
+    state = {"missing": 2, "supply": supply, "repairs": can_wait_repairs,
+             "shrunk": False, "waits": 0}
+
+    def cstate():
+        return ClusterState(
+            n_assigned=4 - state["missing"], n_target=4, min_nodes=2,
+            free_supply=state["supply"],
+            repair_eta_s=60.0 if state["repairs"] > 0 else None)
+
+    def claim():
+        if state["supply"] <= 0:
+            return False
+        state["supply"] -= 1
+        state["missing"] -= 1
+        return True
+
+    def shrink():
+        state["shrunk"] = True
+
+    def wait():
+        if state["repairs"] <= 0:
+            return False
+        state["repairs"] -= 1
+        state["supply"] += 1
+        state["waits"] += 1
+        return True
+
+    ex = RecoveryExecutor(missing=lambda: state["missing"], try_claim=claim,
+                          do_shrink=shrink, do_wait=wait)
+    return state, cstate, ex
+
+
+def test_fill_slots_claims_until_filled():
+    planner = RecoveryPlanner()
+    state, cstate, ex = _exec_harness(supply=3)
+    assert fill_slots(planner, Incident("fault"), cstate, ex) == "filled"
+    assert state["missing"] == 0 and not state["shrunk"]
+
+
+def test_fill_slots_partial_claim_then_shrink():
+    planner = RecoveryPlanner()
+    state, cstate, ex = _exec_harness(supply=1)
+    assert fill_slots(planner, Incident("fault"), cstate, ex) == "shrunk"
+    # the one claimable machine was still taken before degrading
+    assert state["missing"] == 1 and state["shrunk"]
+    # the log records the primary resolution once, not every iteration
+    assert [e["decision"] for e in planner.log.entries] == [SHRINK]
+
+
+def test_fill_slots_waits_for_repairs_with_no_shrink_policy():
+    planner = RecoveryPlanner("no_shrink")
+    state, cstate, ex = _exec_harness(supply=0, can_wait_repairs=2)
+    assert fill_slots(planner, Incident("fault"), cstate, ex) == "filled"
+    assert state["waits"] == 2 and not state["shrunk"]
+
+
+def test_fill_slots_parks_when_wait_returns_none():
+    planner = RecoveryPlanner("no_shrink")
+    ex = RecoveryExecutor(missing=lambda: 1, try_claim=lambda: False,
+                          do_wait=lambda: None)
+    st = ClusterState(n_assigned=3, n_target=4, min_nodes=4,
+                      wait_allowed=True)
+    assert fill_slots(planner, Incident("fault"), lambda: st, ex) == "waiting"
+
+
+def test_fill_slots_gives_up_when_nothing_feasible():
+    planner = RecoveryPlanner()
+    ex = RecoveryExecutor(missing=lambda: 1, try_claim=lambda: False)
+    st = ClusterState(n_assigned=1, n_target=2, min_nodes=2)
+    assert fill_slots(planner, Incident("fault"), lambda: st, ex) == "gave_up"
+
+
+# --------------------------------------------------------------------------- #
+# fleet: regrow-after-repair (the follow-on the shared planner fixes)
+# --------------------------------------------------------------------------- #
+def test_fleet_job_regrows_when_repair_lands():
+    from repro.fleet import FleetConfig, JobSpec, run_fleet
+    from repro.sim.faults import FaultEvent
+
+    crash = (FaultEvent(3600.0, "node0001", "node_hw",
+                        degrades_only=False),)
+    cfg = FleetConfig(
+        jobs=(JobSpec("solo", 4, min_nodes=2, ideal_hours=12.0),),
+        n_nodes=4, n_spares=0, repair_hours=2.0, scripted=crash)
+    rep = run_fleet(cfg, seed=0)
+    j = rep["jobs"]["solo"]
+    assert j["shrinks"] == 1
+    assert j["regrows"] == 1                 # historically stayed shrunk
+    assert j["final_nodes"] == 4
+    # the regrow is a planned reshard: rollback + full store restore
+    assert j["restore_sources"].get("store_full", 0) >= 2
+    decisions = [e["decision"] for e in rep["decisions"]["log"]]
+    assert decisions.index("shrink") < decisions.index("regrow")
+    # the regrow entry fires at the repair instant, not at some later fault
+    regrow_t = [e["t"] for e in rep["decisions"]["log"]
+                if e["decision"] == "regrow"][0]
+    assert regrow_t < 4 * 3600.0 + 600.0     # crash + repair_hours + slack
+
+
+def test_fleet_regrow_preset_and_decision_log_deterministic():
+    from repro.fleet import run_preset
+
+    a = run_preset("shrink_then_regrow", seed=0)
+    b = run_preset("shrink_then_regrow", seed=0)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert a["shrank_then_regrew"] is True
+    assert a["finished_full_strength"] is True
+    assert a["decision_arc"] == ["shrink", "regrow"]
+
+
+def test_fleet_regrow_respects_priority_order():
+    """Two shrunken jobs, one repaired machine: the higher-priority job
+    reclaims it."""
+    from repro.fleet import FleetConfig, JobSpec, run_fleet
+    from repro.sim.faults import FaultEvent
+
+    crashes = (FaultEvent(3600.0, "node0001", "node_hw",
+                          degrades_only=False),
+               FaultEvent(3600.0, "node0005", "node_hw",
+                          degrades_only=False))
+    cfg = FleetConfig(
+        jobs=(JobSpec("hi", 4, priority=10, min_nodes=2, ideal_hours=12.0),
+              JobSpec("lo", 4, priority=1, min_nodes=2, ideal_hours=12.0)),
+        n_nodes=8, n_spares=0, repair_hours=2.0, preemption=False,
+        scripted=crashes)
+    rep = run_fleet(cfg, seed=0)
+    hi, lo = rep["jobs"]["hi"], rep["jobs"]["lo"]
+    assert hi["shrinks"] == 1 and lo["shrinks"] == 1
+    regrows = [e for e in rep["decisions"]["log"]
+               if e["decision"] == "regrow"]
+    assert regrows and regrows[0]["job"] == "hi"
+
+
+def test_soak_report_carries_decision_log():
+    from repro.sim.soak import SoakConfig, run_soak
+
+    rep = run_soak(SoakConfig(ideal_days=2.0, n_nodes=8, n_spares=0,
+                              mtbf_node_days=6.0, repair_hours=240.0,
+                              shrink_threshold=0.5, seed=0))
+    dec = rep["decisions"]
+    assert dec["n"] == sum(dec["by_decision"].values()) > 0
+    assert dec["by_decision"].get("shrink", 0) >= 1
+    assert len(dec["log"]) <= 40
+    json.dumps(rep)
+
+
+def test_soak_planner_policy_is_runtime_selectable():
+    """Chameleon-style: the same fault timeline under a different planner
+    policy recovers differently (no_shrink waits instead of degrading)."""
+    from repro.sim.soak import SoakConfig, run_soak
+
+    base = dict(ideal_days=2.0, n_nodes=8, n_spares=0, mtbf_node_days=6.0,
+                repair_hours=2.0, shrink_threshold=0.5, seed=0)
+    shrinky = run_soak(SoakConfig(**base))
+    waity = run_soak(SoakConfig(planner_policy="no_shrink", **base))
+    assert shrinky["faults"]["injected"] == waity["faults"]["injected"]
+    assert shrinky["fleet"]["shrinks"] >= 1
+    assert waity["fleet"]["shrinks"] == 0
+    assert waity["recovery"]["waits_for_repair"] >= 1
+
+
+def test_scenario_report_carries_step_indexed_decisions():
+    from repro.sim.scenarios import run_scenario
+
+    rep = run_scenario("elastic_shrink_then_grow", seed=0)
+    log = rep["decisions"]["log"]
+    assert rep["decisions"]["n"] == len(log) >= 2
+    decisions = [e["decision"] for e in log]
+    assert "shrink" in decisions and "regrow" in decisions
+    # closed-loop entries are step-indexed (fault at step 10, grow at 20)
+    assert all(0 <= e["t"] <= 30 for e in log)
+
+
+def test_multi_victim_shrink_respects_elastic_floor(tmp_path):
+    """Pinned behavior change vs the pre-planner orchestrator: a shrink that
+    would land BELOW min_nodes is refused (job fails) even when dropping
+    just one of the victims would have passed the old `len-1 >= min` check.
+    The planner's floor check is on the actual survivor count."""
+    import jax.numpy as jnp
+
+    from repro.core.tce import DiskStore, TCEConfig, TCEngine
+    from repro.core.tol import ClusterSim, JobConfig, TransomOperator, \
+        TransomServer
+    from repro.core.tol.cluster import NodeState
+    from repro.core.tol.orchestrator import SimulatedFault
+
+    cluster = ClusterSim(n_nodes=4, n_spares=0)
+    tce = TCEngine(TCEConfig(n_nodes=4), DiskStore(str(tmp_path)))
+    op = TransomOperator(TransomServer(), cluster, tce, tee=None)
+
+    def two_die(step):
+        if step == 6:
+            for rank in (2, 3):
+                node = op.launchers[rank].node
+                cluster.nodes[node].state = NodeState.FAILED
+            raise SimulatedFault("node_hw", 2)
+
+    report, _ = op.run_job(
+        JobConfig(total_steps=20, ckpt_every=5, n_sim_nodes=4,
+                  allow_shrink=True, min_nodes=3),
+        jnp.zeros(()), lambda s, i: s + 1.0, fault_hook=two_die)
+    op.tce.close()
+    # 2 survivors < floor 3: the planner refuses to run below the floor
+    assert not report.completed
+    assert report.state_history[-1][1] == "failed"
+    assert report.decisions[-1]["decision"] == GIVE_UP
+
+
+# --------------------------------------------------------------------------- #
+# FSM history on the shared sim clock (satellite)
+# --------------------------------------------------------------------------- #
+def test_fsm_history_uses_sim_clock_when_bound():
+    from repro.core.tol.fsm import JobState, LauncherFSM
+    from repro.sim.clock import SimClock
+
+    clock = SimClock()
+    fsm = LauncherFSM(clock=clock)
+    assert fsm.history[0][0] == 0.0
+    clock.advance(123.5)
+    fsm.to(JobState.WARMUP, "launch")
+    clock.advance(10.0)
+    fsm.to(JobState.RUNNING)
+    assert [t for t, _, _ in fsm.history] == [0.0, 123.5, 133.5]
+
+
+def test_operator_fsm_is_bound_to_the_substrate_clock():
+    from repro.sim.scenarios import build_substrate
+
+    sub = build_substrate(n_nodes=2, n_spares=0, with_tee=False)
+    try:
+        assert sub.operator.fsm.clock is sub.clock
+        ts = [t for t, _, _ in sub.operator.fsm.history]
+        assert ts == [0.0]
+    finally:
+        sub.close()
+
+
+# --------------------------------------------------------------------------- #
+# per-job checkpoint namespaces in one shared store root (satellite)
+# --------------------------------------------------------------------------- #
+def test_disk_store_namespaces_do_not_collide_on_step_keys(tmp_path):
+    from repro.core.tce.sharding import ShardSpec
+    from repro.core.tce.store import DiskStore
+
+    def shards(val):
+        arr = np.full(16, val, np.float32)
+        return {"w": (ShardSpec("w", (16,), "float32", (0, 16), 0, 1), arr)}
+
+    root = DiskStore(str(tmp_path))
+    a, b = root.namespace("jobA"), root.namespace("jobB")
+    a.write_rank(5, 0, shards(1.0))
+    a.commit(5, 1)
+    b.write_rank(5, 0, shards(2.0))     # same step key, other namespace
+    b.commit(5, 1)
+    assert a.steps() == b.steps() == [5]
+    assert root.steps() == []           # the shared root holds no steps
+    got_a = a.read_rank(5, 0)["w"][1]
+    got_b = b.read_rank(5, 0)["w"][1]
+    assert float(got_a[0]) == 1.0 and float(got_b[0]) == 2.0
+    # weird job ids stay filesystem-safe AND the mapping stays injective:
+    # ids differing only in sanitised characters must not share a dir
+    weird_a = root.namespace("job/1").root.name
+    weird_b = root.namespace("job:1").root.name
+    assert "/" not in weird_a and ":" not in weird_b
+    assert weird_a != weird_b
+
+
+def test_nas_store_namespaces_share_clock_and_arbiter(tmp_path):
+    from repro.core.tce.sharding import ShardSpec
+    from repro.core.tce.store import NASStore, SharedBandwidth
+    from repro.sim.clock import SimClock
+
+    clock = SimClock()
+    arb = SharedBandwidth(1e6)
+    root = NASStore(str(tmp_path), bw_per_rank=1e6, clock=clock, arbiter=arb)
+    a, b = root.namespace("jobA"), root.namespace("jobB")
+    assert a.clock is clock and b.clock is clock
+    assert a.arbiter is arb and b.arbiter is arb
+    arr = np.zeros(250_000, np.float32)         # 1 MB -> 1 s solo
+    sh = {"w": (ShardSpec("w", arr.shape, "float32", (0, arr.size), 0, 1),
+                arr)}
+    a.write_rank(0, 0, sh)
+    solo = clock.seconds
+    arb.start(clock.seconds, 10e6, "jobA:restore")   # contending flow
+    t0 = clock.seconds
+    b.write_rank(0, 0, sh)
+    assert clock.seconds - t0 == pytest.approx(2 * solo, rel=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# reconciler digest/encode CPU charged to the modelled clock (satellite)
+# --------------------------------------------------------------------------- #
+def test_reconciler_charges_digest_cpu_to_modelled_clock(tmp_path):
+    from repro.core.tce import DiskStore, TCEConfig, TCEngine
+
+    nbytes = 4 * (1 << 20)
+    state = {"w": np.zeros(nbytes // 4, np.float32)}
+
+    def run(cycles):
+        cfg = TCEConfig(n_nodes=2, backup=False, async_persist=False,
+                        reconcile_cpu_cycles_per_byte=cycles,
+                        reconcile_cpu_hz=2.5e9)
+        tce = TCEngine(cfg, DiskStore(str(tmp_path / f"c{cycles}")))
+        t0 = tce.clock.seconds
+        tce.save(1, state, wait=True)
+        dt = tce.clock.seconds - t0
+        stats = dict(tce.reconciler.stats)
+        tce.close()
+        return dt, stats
+
+    dt_free, st_free = run(0.0)
+    dt_charged, st_charged = run(3.0)
+    # every byte of the checkpoint was digested exactly once
+    assert st_charged["cpu_bytes_charged"] == nbytes
+    assert st_free["cpu_bytes_charged"] == 0
+    want = nbytes * 3.0 / 2.5e9
+    assert dt_charged - dt_free == pytest.approx(want, rel=0.2)
+
+
+def test_reconciler_encode_cpu_charged_with_codec(tmp_path):
+    from repro.core.tce import DiskStore, TCEConfig, TCEngine
+
+    state = {"w": np.zeros(1 << 18, np.float32)}
+    cfg = TCEConfig(n_nodes=2, backup=False, async_persist=False,
+                    codec="zlib", lossless_paths=("*",),
+                    reconcile_cpu_cycles_per_byte=3.0)
+    tce = TCEngine(cfg, DiskStore(str(tmp_path / "enc")))
+    tce.save(1, state, wait=True)
+    charged = tce.reconciler.stats["cpu_bytes_charged"]
+    tce.close()
+    # digest pass + encode pass both charged
+    assert charged >= 2 * state["w"].nbytes
