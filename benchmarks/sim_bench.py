@@ -1,0 +1,326 @@
+#!/usr/bin/env python3
+"""Simulator-core bench — events/sec and wall time at 64 / 1k / 10k nodes.
+
+Benchmarks the vectorized DES core (batched inter-arrival sampling, array-
+backed topology, batched event drain) against the original per-node Python
+hot loop, and times the month-horizon replay presets at each scale point.
+Emits ``BENCH_sim.json`` for ``scripts/bench_gate.py`` (the CI sim gate).
+
+The artifact has two sections:
+
+* a **deterministic** part — per-scale fault-timeline digests, event counts
+  and replay-run summaries. Byte-identical across runs at the same seed
+  (CI diffs two invocations with the ``measured`` section stripped), and
+  pinned against the committed baseline: a digest drift means the RNG
+  stream changed, which must be a deliberate, baseline-regenerating change.
+* a **measured** part — wall times and events/sec (host-dependent, never
+  diffed), plus same-machine A/B ``checks`` the gate fails on:
+  - ``hot_loop_speedup_20x_at_1k``: the vectorized sample+drain+repair hot
+    loop is >= 20x the seed-style loop (per-node sampling, one-at-a-time
+    pops, O(n) Python repair scan per event) at the 1k-node point;
+  - ``fleet_10k_under_60s``: the 10k-node, ~30-modelled-day fleet replay
+    finishes within 60 s of wall time.
+
+Usage:
+
+    python benchmarks/sim_bench.py --json BENCH_sim.json
+    python benchmarks/sim_bench.py --quick        # skip the 10k points
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import sys
+import time
+
+from repro.sim.clock import EventQueue, SimClock
+from repro.sim.faults import FaultInjector, push_schedule
+from repro.sim.replay import run_replay
+from repro.sim.topology import NodeState, Topology
+
+# (scale label, n_nodes, horizon_days, replay preset, run legacy A/B here)
+SCALE_POINTS = (
+    ("64", 64, 10.0, "table1_64_week", True),
+    ("1k", 1024, 40.0, "table1_1k_month", True),
+    ("10k", 10240, 40.0, "table1_10k_month", False),
+)
+MTBF_DAYS = 110.0          # Table-I node MTBF at every point
+REPAIR_S = 4 * 3600.0
+
+
+def timeline_digest(schedule) -> str:
+    """Stable fingerprint of a sampled fault timeline (order, times, nodes,
+    categories): pins the RNG stream against accidental drift."""
+    h = hashlib.sha256()
+    for ev in schedule:
+        h.update(f"{ev.t:.6f},{ev.node},{ev.category},"
+                 f"{int(ev.degrades_only)};".encode())
+    return h.hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------- #
+# hot-loop A/B: the seed's per-event Python path vs the vectorized core.
+# Both sides run the same per-event engine workload — repair sweep,
+# bad-node scan, two planner supply snapshots, then evict the victim and
+# claim a replacement (what one fault costs in the soak engine); only the
+# implementation underneath differs. The A/B horizon is shorter than the
+# replay horizon: events/sec is a rate, and the seed side's O(n^2)-per-claim
+# scan makes long legacy runs pointless.
+# --------------------------------------------------------------------------- #
+P_CASCADE = 0.1
+CASCADE_WINDOW_S = 600.0
+AB_HORIZON_DAYS = 10.0
+
+
+class _SeedNode:
+    """The seed's per-node record: a plain object holding a ``NodeState``
+    enum, exactly as the pre-vectorization ``Node`` dataclass did."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.state = NodeState.HEALTHY
+        self.repair_at = 0.0
+
+
+def legacy_hot_loop(n_nodes: int, seed: int = 0):
+    """The seed's hot loop, replicated shape-for-shape: per-node Python
+    inter-arrival sampling (``schedule_legacy``), a cascade pass that
+    rebuilds the victim-candidate list per primary event (O(n) per event,
+    O(n^2) overall), one event popped at a time, and the seed Topology's
+    per-event Python costs over ``Node`` objects with enum states —
+    ``repair_due`` scanning every node, ``bad_assigned_nodes`` as a full
+    list comp, two planner ``_cstate`` snapshots (each another repair scan,
+    a *sorted* free-list rebuild and a full repair-ETA scan), and
+    ``claim_replacement`` testing ``name not in assigned`` (an O(n) list
+    membership) inside an O(n) candidate rebuild."""
+    import numpy as np
+
+    H, F, C = NodeState.HEALTHY, NodeState.FAILED, NodeState.CORDONED
+    inj = FaultInjector(n_nodes, MTBF_DAYS, horizon_days=AB_HORIZON_DAYS,
+                        seed=seed)
+    names = [f"node{i:04d}" for i in range(n_nodes)]
+    # cluster-state setup is excluded from the timed section on both sides:
+    # the engines build their topology once per run, not per event
+    clock = SimClock()
+    q = EventQueue(clock)
+    nodes = {n: _SeedNode(n) for n in names}
+    assigned = list(names)                     # plain list, as in the seed
+    leases = dict.fromkeys(names, "job0")
+    t0 = time.perf_counter()
+    schedule = inj.schedule_legacy()
+    # seed cascade_events: per-primary victim-list rebuild
+    rng = np.random.default_rng(seed + 1)
+    out = list(schedule)
+    for ev in schedule:
+        if ev.degrades_only or rng.random() >= P_CASCADE:
+            continue
+        others = [n for n in names if n != ev.node]     # O(n) per event
+        victim = others[int(rng.integers(len(others)))]
+        dt = float(rng.uniform(1.0, CASCADE_WINDOW_S))
+        out.append(type(ev)(ev.t + dt, victim, "node_hw",
+                            degrades_only=False, cascade_of=ev.node))
+    out.sort(key=lambda e: e.t)
+    push_schedule(q, out)
+    n_ev = 0
+    while q:
+        t, ev = q.pop()
+        n_ev += 1
+        for n in nodes.values():               # seed repair_due: O(n) scan
+            if n.state in (F, C) and n.repair_at <= t:
+                n.state = H
+        # seed bad_assigned_nodes: full list comp per event
+        bad = [nm for nm in assigned if nodes[nm].state is F]
+        # the seed planner's _cstate, taken twice per incident (record gate
+        # + fill pass): a full repair_due scan, claimable_supply -> sorted
+        # free-list rebuild, and a full-scan repair-ETA lookup
+        for _ in range(2):
+            for n in nodes.values():
+                if n.state in (F, C) and n.repair_at <= t:
+                    n.state = H
+            supply = len(sorted(n.name for n in nodes.values()
+                                if n.state == H and n.name not in leases
+                                and n.name not in assigned))
+            due = [n.repair_at for n in nodes.values()
+                   if n.state in (F, C)]
+            eta = min(due) if due else math.inf
+        del bad, supply, eta
+        if ev.degrades_only:
+            continue
+        node = nodes[ev.node]
+        if node.state != H:
+            continue
+        node.state = F
+        node.repair_at = t + REPAIR_S
+        # seed evict: cordon + release the lease + O(n) list removal
+        leases.pop(ev.node, None)
+        if ev.node in assigned:
+            assigned.remove(ev.node)
+        # seed claim_replacement: candidate rebuild with an O(n) list
+        # membership inside the comp, then the same checks again per
+        # candidate in the grant loop
+        repaired = [n.name for n in nodes.values()
+                    if n.state == H and n.name not in leases
+                    and n.name not in assigned]
+        for cand in repaired:
+            if nodes[cand].state == H and cand not in leases \
+                    and cand not in assigned:
+                leases[cand] = "job0"
+                assigned.append(cand)
+                break
+    return time.perf_counter() - t0, n_ev
+
+
+def vector_hot_loop(n_nodes: int, seed: int = 0):
+    """The same per-event workload on the vectorized core: batched
+    sampling, fixed-size-batch cascade draws, batched same-timestamp drain,
+    and the array-backed topology's repair sweep / bad-node scan / supply
+    snapshots / mask-based replacement claim."""
+    from repro.sim.faults import cascade_events
+
+    inj = FaultInjector(n_nodes, MTBF_DAYS, horizon_days=AB_HORIZON_DAYS,
+                        seed=seed)
+    names = [f"node{i:04d}" for i in range(n_nodes)]
+    clock = SimClock()
+    q = EventQueue(clock)
+    topo = Topology(n_nodes, n_spares=0, repair_hours=REPAIR_S / 3600.0,
+                    clock=clock)
+    t0 = time.perf_counter()
+    schedule = cascade_events(inj.schedule(), names, p_cascade=P_CASCADE,
+                              recovery_window_s=CASCADE_WINDOW_S,
+                              seed=seed + 1)
+    push_schedule(q, schedule)
+    n_ev = 0
+    while q:
+        t, evs = q.pop_batch()
+        n_ev += len(evs)
+        topo.repair_due(t)
+        bad = topo.bad_assigned_nodes()
+        for _ in range(2):
+            topo.repair_due(t)           # O(1) unless a repair came due
+            supply = topo.claimable_supply()
+            eta = topo.next_repair_at()
+        del bad, supply, eta
+        for ev in evs:
+            if ev.degrades_only:
+                continue
+            node = topo.nodes[ev.node]
+            if node.state != NodeState.HEALTHY:
+                continue
+            node.state = NodeState.FAILED
+            node.repair_at = t + REPAIR_S
+            topo.evict(ev.node, t)
+            topo.schedule_replacement(set())
+    return time.perf_counter() - t0, n_ev
+
+
+def _best_of(fn, reps: int, *args, **kwargs):
+    """Fastest of ``reps`` runs (events count comes from the fastest run;
+    the loops are deterministic, so every run sees the same events)."""
+    best_s, n_ev = math.inf, 0
+    for _ in range(reps):
+        s, n = fn(*args, **kwargs)
+        if s < best_s:
+            best_s, n_ev = s, n
+    return best_s, n_ev
+
+
+# --------------------------------------------------------------------------- #
+def build_payload(seed: int = 0, quick: bool = False) -> dict:
+    """Full artifact: deterministic digests/summaries + measured timings."""
+    points = [p for p in SCALE_POINTS if not (quick and p[0] == "10k")]
+    scale_points = {}
+    walls = {}
+    hot = {}
+    for label, n_nodes, horizon, preset, run_legacy in points:
+        schedule = FaultInjector(n_nodes, MTBF_DAYS, horizon_days=horizon,
+                                 seed=seed).schedule()
+        t0 = time.perf_counter()
+        rep = run_replay(preset, seed=seed)
+        wall = time.perf_counter() - t0
+        scale_points[label] = {
+            "n_nodes": n_nodes,
+            "horizon_days": horizon,
+            "n_events": len(schedule),
+            "digest": timeline_digest(schedule),
+            "replay": {
+                "preset": preset,
+                "makespan_days": rep["makespan_days"],
+                "utilization": rep["fleet"]["utilization"],
+                "faults_injected": rep["faults"]["injected"],
+                "faults_hit_jobs": rep["faults"]["hit_jobs"],
+            },
+        }
+        walls[label] = {"replay_wall_s": round(wall, 3),
+                        "replay_events_per_s": round(
+                            rep["faults"]["injected"] / max(wall, 1e-9), 1)}
+        # best-of-N on both sides of the A/B: single-shot timings on shared
+        # CI hosts are noisy enough to flip the gate
+        vec_s, vec_n = _best_of(vector_hot_loop, 5, n_nodes, seed=seed)
+        hot[label] = {
+            "vector_s": round(vec_s, 4),
+            "vector_events_per_s": round(vec_n / max(vec_s, 1e-9), 1),
+        }
+        if run_legacy:
+            leg_s, leg_n = _best_of(legacy_hot_loop, 3, n_nodes, seed=seed)
+            leg_rate = leg_n / max(leg_s, 1e-9)
+            vec_rate = vec_n / max(vec_s, 1e-9)
+            hot[label].update(
+                legacy_s=round(leg_s, 4),
+                legacy_events_per_s=round(leg_rate, 1),
+                legacy_n_events=leg_n,
+                speedup_x=round(vec_rate / max(leg_rate, 1e-9), 1))
+    checks = {}
+    if "1k" in hot and "speedup_x" in hot["1k"]:
+        checks["hot_loop_speedup_20x_at_1k"] = hot["1k"]["speedup_x"] >= 20.0
+    if "10k" in walls:
+        checks["fleet_10k_under_60s"] = \
+            walls["10k"]["replay_wall_s"] <= 60.0
+    return {
+        "bench": "sim",
+        "seed": seed,
+        "quick": quick,
+        "scale_points": scale_points,
+        # host-dependent: stripped before the CI determinism diff
+        "measured": {
+            "walls": walls,
+            "hot_loop": hot,
+            "checks": checks,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the 10k-node points (test/dev mode)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the artifact to this file")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    payload = build_payload(seed=args.seed, quick=args.quick)
+    if not args.quiet:
+        for label, sp in payload["scale_points"].items():
+            w = payload["measured"]["walls"][label]
+            h = payload["measured"]["hot_loop"][label]
+            line = (f"{label:>4}: {sp['n_events']} events "
+                    f"(digest {sp['digest']}), replay "
+                    f"{w['replay_wall_s']:.2f}s wall, hot loop "
+                    f"{h['vector_events_per_s']:.0f} ev/s")
+            if "speedup_x" in h:
+                line += f" ({h['speedup_x']:.0f}x over seed loop)"
+            print(line)
+        for name, ok in payload["measured"]["checks"].items():
+            print(f"check {name}: {'OK' if ok else 'FAIL'}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return 0 if all(payload["measured"]["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

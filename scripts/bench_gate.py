@@ -19,6 +19,12 @@ fails (exit 1) on regression. The artifact kind is auto-detected:
   below 2x), or the measured save-stall wall time of the new datapath is no
   longer at or below the legacy path's (same-machine A/B, so it is robust
   to host speed differences).
+* ``BENCH_sim.json`` (``benchmarks/sim_bench.py --json``): fails if any
+  scale point disappeared, a fault-timeline digest or event count changed
+  (the sampler must stay deterministic), a replay summary drifted, or any
+  measured check (20x hot-loop speedup at 1k, 10k-node month replay under
+  60 s) went false. Timings themselves are not compared across hosts — the
+  speedup check is a same-machine A/B.
 
 Usage:
 
@@ -38,12 +44,17 @@ _BASE_DIR = os.path.join(
 DEFAULT_BASELINE = os.path.join(_BASE_DIR, "BENCH_fig6.json")
 FLEET_BASELINE = os.path.join(_BASE_DIR, "BENCH_fleet.json")
 TCE_BASELINE = os.path.join(_BASE_DIR, "BENCH_tce.json")
+SIM_BASELINE = os.path.join(_BASE_DIR, "BENCH_sim.json")
 
 
 def _point_key(point: dict) -> Tuple:
     pol = point["policy"]
+    # planner_policy/fault_mix default for baselines emitted before the
+    # replay axes existed
     return (pol["ckpt_cadence_s"], pol["spare_pool"],
-            pol["shrink_threshold"], pol["fault_rate_per_week"])
+            pol["shrink_threshold"], pol["fault_rate_per_week"],
+            pol.get("planner_policy", "transom"),
+            pol.get("fault_mix", "table1"))
 
 
 def gate(fresh: dict, baseline: dict, tolerance: float = 0.05) -> List[str]:
@@ -121,6 +132,40 @@ def gate_tce(fresh: dict, baseline: dict,
     return fails
 
 
+def gate_sim(fresh: dict, baseline: dict,
+             tolerance: float = 0.05) -> List[str]:
+    """Simulator-core gate. Determinism (digests, event counts, replay
+    summaries) is compared exactly; host-dependent timings are not — the
+    artifact's own checks carry the speedup/wall-time bars."""
+    fails: List[str] = []
+    fresh_pts = fresh.get("scale_points", {})
+    for label, bp in baseline["scale_points"].items():
+        np_ = fresh_pts.get(label)
+        if np_ is None:
+            fails.append(f"scale point {label!r} missing from fresh bench")
+            continue
+        for field in ("n_nodes", "horizon_days", "n_events", "digest"):
+            if np_.get(field) != bp[field]:
+                fails.append(
+                    f"fault timeline changed at {label!r}: {field} "
+                    f"{bp[field]!r} -> {np_.get(field)!r} (sampler no "
+                    f"longer deterministic, or a silent stream change)")
+        old_r, new_r = bp["replay"], np_.get("replay", {})
+        for field in ("preset", "faults_injected", "faults_hit_jobs"):
+            if new_r.get(field) != old_r[field]:
+                fails.append(f"replay summary changed at {label!r}: {field} "
+                             f"{old_r[field]!r} -> {new_r.get(field)!r}")
+        old_u, new_u = old_r["utilization"], new_r.get("utilization", 0.0)
+        if new_u < old_u * (1.0 - tolerance):
+            fails.append(f"replay utilization regressed at {label!r}: "
+                         f"{old_u:.4f} -> {new_u:.4f} "
+                         f"(> {tolerance:.0%} drop)")
+    for name, ok in fresh.get("measured", {}).get("checks", {}).items():
+        if not ok:
+            fails.append(f"sim check {name!r} went false")
+    return fails
+
+
 def gate_any(fresh: dict, baseline: dict,
              tolerance: float = 0.05) -> List[str]:
     """Dispatch on artifact kind (the ``bench`` tag)."""
@@ -133,6 +178,8 @@ def gate_any(fresh: dict, baseline: dict,
         return gate_fleet(fresh, baseline, tolerance=tolerance)
     if kind_f == "tce":
         return gate_tce(fresh, baseline, tolerance=tolerance)
+    if kind_f == "sim":
+        return gate_sim(fresh, baseline, tolerance=tolerance)
     return gate(fresh, baseline, tolerance=tolerance)
 
 
@@ -151,7 +198,8 @@ def main(argv=None) -> int:
     baseline_path = args.baseline
     if baseline_path is None:
         baseline_path = {"fleet": FLEET_BASELINE,
-                         "tce": TCE_BASELINE}.get(fresh.get("bench"),
+                         "tce": TCE_BASELINE,
+                         "sim": SIM_BASELINE}.get(fresh.get("bench"),
                                                   DEFAULT_BASELINE)
     with open(baseline_path) as f:
         baseline = json.load(f)
@@ -171,6 +219,17 @@ def main(argv=None) -> int:
               f"{fresh['datapath']['copy_reduction_x']:.1f}x fewer copies/save, "
               f"stall ratio "
               f"{fresh['measured']['stall_ratio_new_over_legacy']:.2f}")
+    elif fresh.get("bench") == "sim":
+        hot = fresh["measured"]["hot_loop"]
+        walls = fresh["measured"]["walls"]
+        bits = [f"{len(baseline['scale_points'])} scale points "
+                f"digest-identical to baseline"]
+        if "1k" in hot and "speedup_x" in hot["1k"]:
+            bits.append(f"1k hot loop {hot['1k']['speedup_x']:.0f}x over "
+                        f"seed")
+        if "10k" in walls:
+            bits.append(f"10k replay {walls['10k']['replay_wall_s']:.1f}s")
+        print("bench gate OK: " + "; ".join(bits))
     else:
         n = len(baseline["sweep"]["points"])
         print(f"bench gate OK: {n} grid points within {args.tolerance:.0%} "

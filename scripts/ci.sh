@@ -95,6 +95,22 @@ diff "$TMP/BENCH_tce.json.det" "$TMP/BENCH_tce_b.json.det" \
     || { echo "FAIL: TCE bench is nondeterministic" >&2; exit 1; }
 python scripts/bench_gate.py "$TMP/BENCH_tce.json"
 
+echo "== bench regression gate: DES simulator core vs committed baseline =="
+python benchmarks/sim_bench.py --quiet --json "$TMP/BENCH_sim.json"
+python benchmarks/sim_bench.py --quiet --json "$TMP/BENCH_sim_b.json"
+# digests/replay summaries must be byte-identical across runs; wall-clock
+# timings live under "measured" and are host-dependent — strip before diff
+python - "$TMP/BENCH_sim.json" "$TMP/BENCH_sim_b.json" <<'EOF'
+import json, sys
+for p in sys.argv[1:]:
+    d = json.load(open(p))
+    d.pop("measured", None)
+    json.dump(d, open(p + ".det", "w"), indent=1, sort_keys=True)
+EOF
+diff "$TMP/BENCH_sim.json.det" "$TMP/BENCH_sim_b.json.det" \
+    || { echo "FAIL: sim bench is nondeterministic" >&2; exit 1; }
+python scripts/bench_gate.py "$TMP/BENCH_sim.json"
+
 # every scenario (incl. weeklong_soak / policy_frontier and the fleet
 # presets) already ran twice in the determinism gates; just confirm the
 # catalog CLIs render

@@ -38,7 +38,8 @@ from repro.recovery import (REGROW, ClusterState, CostModel, Incident,
 from repro.recovery.executor import WAITING as PLAN_WAITING
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.faults import (FaultEvent, FaultInjector, cascade_events,
-                              domain_outage_schedule, merge_schedules,
+                              domain_outage_schedule, get_mix,
+                              group_domain_incidents, merge_schedules,
                               push_schedule)
 from repro.sim.soak import DAY_S, NODE_ATTRIBUTABLE, SoakPolicy
 from repro.sim.topology import NodeState, Topology
@@ -78,6 +79,7 @@ class FleetConfig:
     horizon_days: float = 30.0
     scripted: Tuple[FaultEvent, ...] = ()        # deterministic extra events
     planner_policy: str = "transom"              # RecoveryPlanner policy
+    fault_mix: str = "table1"                    # category mix (faults.MIXES)
     seed: int = 0
 
 
@@ -153,15 +155,19 @@ class _FleetRun:
             if spec.submit_at_s > 0:
                 self.events.push(spec.submit_at_s, ("submit", spec.name))
         schedule: List[FaultEvent] = list(cfg.scripted)
+        weights = (None if cfg.fault_mix == "table1"
+                   else dict(get_mix(cfg.fault_mix).weights))
         if cfg.mtbf_node_days > 0:
             primary = FaultInjector(
                 cfg.n_nodes, cfg.mtbf_node_days,
                 horizon_days=cfg.horizon_days,
-                straggler_frac=cfg.straggler_frac, seed=seed).schedule()
+                straggler_frac=cfg.straggler_frac, seed=seed,
+                weights=weights).schedule()
             if cfg.p_cascade > 0:
                 primary = cascade_events(
                     primary, list(self.topo.nodes), p_cascade=cfg.p_cascade,
-                    recovery_window_s=cfg.cascade_window_s, seed=seed + 1)
+                    recovery_window_s=cfg.cascade_window_s, seed=seed + 1,
+                    weights=weights)
             schedule = merge_schedules(schedule, primary)
         if cfg.rack_mtbf_days > 0:
             schedule = merge_schedules(schedule, domain_outage_schedule(
@@ -186,11 +192,10 @@ class _FleetRun:
         return float(self.rng.exponential(pol.detect_mean_s))
 
     def _next_repair(self) -> Optional[float]:
-        due = [n.repair_at for n in self.topo.nodes.values()
-               if n.state in (NodeState.FAILED, NodeState.CORDONED)]
-        if not due:
+        due = self.topo.next_repair_at()
+        if due is None:
             return None
-        return max(min(due), self.clock.seconds + 1.0)
+        return max(due, self.clock.seconds + 1.0)
 
     def _try_admit(self, t: float) -> None:
         self.sched.try_admit()
@@ -414,6 +419,17 @@ class _FleetRun:
         job.until = math.inf
 
     # -- fault dispatch -------------------------------------------------- #
+    def _handle_incident(self, t: float, evs: List[FaultEvent]) -> None:
+        """Dispatch one incident: a single fault, or the member events of a
+        same-(t, domain) correlated outage coalesced by
+        :func:`group_domain_incidents`. Members are processed in the queue's
+        stable FIFO order, exactly as a one-at-a-time drain would (pinned by
+        test): the first member hitting each running job opens its recovery,
+        the rest join that open transaction and escalate it to the store
+        path."""
+        for ev in evs:
+            self._handle_fault(t, ev)
+
     def _handle_fault(self, t: float, ev: FaultEvent) -> None:
         node = self.topo.nodes.get(ev.node)
         owner = self.topo.owner_of(ev.node)
@@ -594,11 +610,12 @@ class _FleetRun:
         for job in self.jobs.values():
             if job.state == RUNNING and job.done >= self._marker(job) - _EPS:
                 self._at_marker(job, t)
-        for _t_ev, payload in self.events.pop_due(t):
-            if isinstance(payload, FaultEvent):
-                self._handle_fault(t, payload)
-            elif isinstance(payload, tuple) and payload[0] == "submit":
-                self.sched.submit(self.specs[payload[1]])
+        for group in group_domain_incidents(self.events.pop_due(t)):
+            first = group[0][1]
+            if isinstance(first, FaultEvent):
+                self._handle_incident(t, [p for _t_ev, p in group])
+            elif isinstance(first, tuple) and first[0] == "submit":
+                self.sched.submit(self.specs[first[1]])
         self._try_admit(t)
 
     # -- report ------------------------------------------------------------ #

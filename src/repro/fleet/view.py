@@ -29,6 +29,8 @@ class JobView:
             assert owner == job_id, \
                 f"{n} leased to {owner!r}, view belongs to {job_id!r}"
         self._rank_map: Dict[int, str] = dict(enumerate(self.assigned))
+        self._node_rank: Dict[str, int] = {
+            n: r for r, n in self._rank_map.items()}
 
     # -- shared-substrate passthrough ----------------------------------- #
     @property
@@ -91,19 +93,23 @@ class JobView:
 
     # -- rank binding (this job's fabric view) --------------------------- #
     def bind_rank(self, rank: int, node: str) -> None:
+        old = self._rank_map.get(rank)
+        if old is not None and self._node_rank.get(old) == rank:
+            del self._node_rank[old]
         self._rank_map[rank] = node
+        self._node_rank.setdefault(node, rank)
 
     def rebind_ranks(self, nodes_in_rank_order: List[str]) -> None:
         self._rank_map = dict(enumerate(nodes_in_rank_order))
+        self._node_rank = {}
+        for r, n in self._rank_map.items():
+            self._node_rank.setdefault(n, r)
 
     def node_of_rank(self, rank: int) -> Optional[str]:
         return self._rank_map.get(rank)
 
     def rank_of_node(self, name: str) -> Optional[int]:
-        for r, n in self._rank_map.items():
-            if n == name:
-                return r
-        return None
+        return self._node_rank.get(name)
 
     def is_rank_down(self, rank: int) -> bool:
         name = self._rank_map.get(rank)

@@ -19,7 +19,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import threading
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Iterable, List, Optional, Tuple
 
 
 class SimClock:
@@ -64,11 +64,29 @@ class EventQueue:
     def push(self, t: float, payload: Any) -> None:
         heapq.heappush(self._heap, (float(t), next(self._seq), payload))
 
+    def push_batch(self, items: Iterable[Tuple[float, Any]]) -> int:
+        """Bulk-load ``(t, payload)`` pairs: one O(n) heapify instead of n
+        heappushes. Sequence numbers are handed out in input order, so the
+        same-timestamp FIFO tie-break matches sequential :meth:`push` calls.
+        """
+        h = self._heap
+        n0 = len(h)
+        h.extend((float(t), next(self._seq), p) for t, p in items)
+        heapq.heapify(h)
+        return len(h) - n0
+
     def push_after(self, delay: float, payload: Any) -> None:
         self.push(self.clock.seconds + delay, payload)
 
     def peek_time(self) -> float:
         return self._heap[0][0] if self._heap else float("inf")
+
+    def peek(self) -> Tuple[float, Any]:
+        """The earliest event without popping it (same tie-break as pop)."""
+        if not self._heap:
+            raise IndexError("peek into empty EventQueue")
+        t, _, payload = self._heap[0]
+        return t, payload
 
     def pop(self, advance_clock: bool = False) -> Tuple[float, Any]:
         """Pop the earliest event; optionally advance the clock to its time."""
@@ -78,6 +96,25 @@ class EventQueue:
         if advance_clock:
             self.clock.advance_to(t)
         return t, payload
+
+    def pop_batch(self, advance_clock: bool = False
+                  ) -> Tuple[float, List[Any]]:
+        """Pop *every* event due at the earliest timestamp in one call.
+
+        Tie-break: among events at the same timestamp, payloads come back in
+        push (FIFO) order — exactly the order repeated :meth:`pop` calls
+        would return them, so a batch drain and a one-at-a-time drain see
+        the same sequence. Returns ``(t, [payload, ...])``.
+        """
+        if not self._heap:
+            raise IndexError("pop_batch from empty EventQueue")
+        t0 = self._heap[0][0]
+        out: List[Any] = []
+        while self._heap and self._heap[0][0] == t0:
+            out.append(heapq.heappop(self._heap)[2])
+        if advance_clock:
+            self.clock.advance_to(t0)
+        return t0, out
 
     def pop_due(self, t: Optional[float] = None,
                 advance_clock: bool = False) -> List[Tuple[float, Any]]:

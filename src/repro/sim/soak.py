@@ -40,10 +40,16 @@ from repro.recovery import (ClusterState, CostModel, Incident,
 
 from .clock import EventQueue, SimClock
 from .faults import (FaultEvent, FaultInjector, cascade_events,
-                     domain_outage_schedule, merge_schedules, push_schedule)
+                     domain_outage_schedule, get_mix, merge_schedules,
+                     push_schedule)
 from .topology import NodeState, Topology
 
 DAY_S = 86400.0
+
+# coalesce same-(t, domain) member events of one correlated outage into a
+# single incident before recovery opens (module flag so the equivalence test
+# can pin coalesced == one-at-a-time)
+COALESCE_INCIDENTS = True
 
 # categories whose error checks surface a concrete bad node (hardware / NIC);
 # the rest (storage, user_code, other) restart in place with no eviction
@@ -114,6 +120,7 @@ class SoakConfig:
     horizon_factor: float = 8.0       # fault schedule length vs ideal_days
     policy: SoakPolicy = transom_policy()
     planner_policy: str = "transom"   # RecoveryPlanner decision policy
+    fault_mix: str = "table1"         # category mix (see faults.MIXES)
     seed: int = 0
 
 
@@ -133,13 +140,16 @@ class _SoakRun:
                              nodes_per_rack=cfg.nodes_per_rack,
                              clock=self.clock)
         horizon = cfg.ideal_days * cfg.horizon_factor
+        weights = (None if cfg.fault_mix == "table1"
+                   else dict(get_mix(cfg.fault_mix).weights))
         primary = FaultInjector(
             cfg.n_nodes, cfg.mtbf_node_days, horizon_days=horizon,
-            straggler_frac=cfg.straggler_frac, seed=seed).schedule()
+            straggler_frac=cfg.straggler_frac, seed=seed,
+            weights=weights).schedule()
         schedule = cascade_events(primary, list(self.topo.nodes),
                                   p_cascade=cfg.p_cascade,
                                   recovery_window_s=cfg.cascade_window_s,
-                                  seed=seed + 1)
+                                  seed=seed + 1, weights=weights)
         if cfg.rack_mtbf_days > 0:
             schedule = merge_schedules(schedule, domain_outage_schedule(
                 self.topo, "rack", cfg.rack_mtbf_days, horizon,
@@ -286,11 +296,10 @@ class _SoakRun:
                        try_claim=_claim, do_shrink=_shrink, do_wait=_wait))
 
     def _next_repair_wait(self) -> Optional[float]:
-        due = [n.repair_at for n in self.topo.nodes.values()
-               if n.state in (NodeState.FAILED, NodeState.CORDONED)]
-        if not due:
+        due = self.topo.next_repair_at()
+        if due is None:
             return None
-        return max(min(due) - self.clock.seconds, 1.0)
+        return max(due - self.clock.seconds, 1.0)
 
     def _recover(self, victims: Set[str]) -> None:
         """One recovery transaction on the shared clock: detection/checks ->
@@ -362,18 +371,33 @@ class _SoakRun:
                              - (self.wait_s - wait0))
         self.downtime_s += self.clock.seconds - t0
 
+    def _handle_incident(self, evs: List[FaultEvent]) -> None:
+        """Dispatch one incident: a single fault, or every member event of a
+        same-(t, domain) correlated outage coalesced into one recovery
+        transaction. Equivalent to handling the members one at a time — the
+        follow-on members would land inside the detection window and be
+        absorbed into the same transaction anyway (pinned by test)."""
+        victims: Set[str] = set()
+        opened = False
+        for ev in evs:
+            victim = self._victim_of(ev)
+            if victim is None:
+                self.counts["idle_faults"] += 1
+                continue
+            self._count_hit(ev)
+            if not opened:
+                self.counts["job_faults"] += 1
+                opened = True
+            else:
+                self.counts["absorbed"] += 1
+            if self._attributable(ev) and victim not in victims:
+                self._fail(victim, ev)
+                victims.add(victim)
+        if opened:
+            self._recover(victims)
+
     def _handle_fault(self, ev: FaultEvent) -> None:
-        victim = self._victim_of(ev)
-        if victim is None:
-            self.counts["idle_faults"] += 1
-            return
-        self.counts["job_faults"] += 1
-        self._count_hit(ev)
-        if self._attributable(ev):
-            self._fail(victim, ev)
-            self._recover({victim})
-        else:
-            self._recover(set())
+        self._handle_incident([ev])
 
     # -- main loop -------------------------------------------------------- #
     def run(self) -> dict:
@@ -405,7 +429,18 @@ class _SoakRun:
                 assert clock.seconds >= t, \
                     f"clock {clock.seconds} behind popped event at {t}"
                 self.done += t_fault_wall * speed
-                self._handle_fault(ev)
+                batch = [ev]
+                if COALESCE_INCIDENTS and isinstance(ev, FaultEvent) \
+                        and ev.domain is not None:
+                    # drain this outage's same-(t, domain) siblings (stable
+                    # FIFO order) so the whole incident is one transaction
+                    while events and events.peek_time() == t:
+                        nxt = events.peek()[1]
+                        if not (isinstance(nxt, FaultEvent)
+                                and nxt.domain == ev.domain):
+                            break
+                        batch.append(events.pop(advance_clock=True)[1])
+                self._handle_incident(batch)
             else:
                 clock.advance(run_wall)
                 self.done += run_prod

@@ -5,6 +5,10 @@ Runs the time-triggered soak engine (``repro.sim.soak``) over a grid of
 emits a deterministic JSON matrix of effective-training-time ratio, lost
 steps and restore-source mix — the paper's Fig. 6 "TRANSOM vs manual
 baseline" comparison computed as a sweep instead of a hardcoded scenario.
+Grids may add ``planner_policy`` (transom/cost/no_shrink RecoveryPlanner
+policies) and ``fault_mix`` (empirical category mixes from
+:data:`repro.sim.faults.MIXES`) axes; the ``month_1k`` / ``month_10k`` grids
+cross both at pod / fleet scale over a 30-day modelled horizon.
 
 The ``fault_rate`` axis is in cluster-wide faults/week; it is turned into a
 concrete fleet via :func:`repro.sim.topology.nodes_for_fault_rate` (MTBF-
@@ -56,22 +60,49 @@ GRIDS: Dict[str, Dict[str, list]] = {
         "shrink_threshold": [0.0],
         "fault_rate_per_week": [64 * 7 / 110.0],
     },
+    # month-horizon replay grids at pod / fleet scale: the planner_policy
+    # and fault_mix axes cross the RecoveryPlanner's decision policies with
+    # the empirical failure mixes (Table I vs ByteDance-style); the node
+    # count comes from the mix's MTBF via the fault-rate axis as usual
+    "month_1k": {
+        "ckpt_cadence_s": [3600.0],
+        "spare_pool": [32],
+        "shrink_threshold": [0.5],
+        "fault_rate_per_week": [1024 * 7 / 110.0],
+        "planner_policy": ["transom", "cost", "no_shrink"],
+        "fault_mix": ["table1", "bytedance"],
+    },
+    "month_10k": {
+        "ckpt_cadence_s": [7200.0],
+        "spare_pool": [128],
+        "shrink_threshold": [0.5],
+        "fault_rate_per_week": [10240 * 7 / 110.0],
+        "planner_policy": ["transom", "cost", "no_shrink"],
+        "fault_mix": ["table1", "bytedance"],
+    },
 }
 
-_GRID_IDEAL_DAYS = {"default": 7.0, "small": 7.0, "fig6": 76.0}
+_GRID_IDEAL_DAYS = {"default": 7.0, "small": 7.0, "fig6": 76.0,
+                    "month_1k": 30.0, "month_10k": 30.0}
 
 
 def run_point(ckpt_cadence_s: float, spare_pool: int,
               shrink_threshold: float, fault_rate_per_week: float,
               seed: int = 0, ideal_days: float = 7.0,
-              mtbf_node_days: float = 110.0) -> dict:
+              mtbf_node_days: float = 110.0,
+              planner_policy: str = "transom",
+              fault_mix: str = "table1") -> dict:
     """One grid point: soak the same fault environment under the TRANSOM
-    policy (at the swept cadence) and the manual baseline."""
+    policy (at the swept cadence) and the manual baseline. ``planner_policy``
+    selects the RecoveryPlanner's decision policy and ``fault_mix`` the
+    empirical category mix; both apply to the pair, so the A/B still isolates
+    detection/checkpoint/restore policy."""
     n_nodes = nodes_for_fault_rate(fault_rate_per_week, mtbf_node_days)
     cfg = SoakConfig(ideal_days=ideal_days, n_nodes=n_nodes,
                      n_spares=spare_pool, mtbf_node_days=mtbf_node_days,
                      shrink_threshold=shrink_threshold,
                      rack_mtbf_days=365.0,
+                     planner_policy=planner_policy, fault_mix=fault_mix,
                      policy=transom_policy(ckpt_cadence_s), seed=seed)
     transom = run_soak(cfg)
     baseline = run_soak(replace(cfg, policy=manual_policy()))
@@ -89,6 +120,8 @@ def run_point(ckpt_cadence_s: float, spare_pool: int,
             "spare_pool": spare_pool,
             "shrink_threshold": shrink_threshold,
             "fault_rate_per_week": round(fault_rate_per_week, 4),
+            "planner_policy": planner_policy,
+            "fault_mix": fault_mix,
             "n_nodes": n_nodes,
         },
         "transom": transom,
@@ -110,11 +143,14 @@ def run_sweep(grid: str = "default", seed: int = 0,
     spec = GRIDS[grid]
     ideal = _GRID_IDEAL_DAYS[grid] if ideal_days is None else ideal_days
     points: List[dict] = []
-    for cadence, spares, thr, rate in itertools.product(
+    for cadence, spares, thr, rate, planner, mix in itertools.product(
             spec["ckpt_cadence_s"], spec["spare_pool"],
-            spec["shrink_threshold"], spec["fault_rate_per_week"]):
+            spec["shrink_threshold"], spec["fault_rate_per_week"],
+            spec.get("planner_policy", ["transom"]),
+            spec.get("fault_mix", ["table1"])):
         points.append(run_point(cadence, spares, thr, rate, seed=seed,
-                                ideal_days=ideal))
+                                ideal_days=ideal, planner_policy=planner,
+                                fault_mix=mix))
     frontier = {}
     for rate in spec["fault_rate_per_week"]:
         cands = [p for p in points
@@ -158,12 +194,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"grid={res['grid']} seed={res['seed']} "
               f"points={res['n_points']} ideal_days={res['ideal_days']}")
         print(f"{'cadence_s':>10} {'spares':>6} {'shrink':>6} {'rate/wk':>8} "
+              f"{'planner':>9} {'mix':>9} "
               f"{'eff_ratio':>9} {'lost_steps':>10} {'improve%':>8}")
         for p in res["points"]:
             pol = p["policy"]
             print(f"{pol['ckpt_cadence_s']:>10.0f} {pol['spare_pool']:>6d} "
                   f"{pol['shrink_threshold']:>6.2f} "
                   f"{pol['fault_rate_per_week']:>8.2f} "
+                  f"{pol['planner_policy']:>9} {pol['fault_mix']:>9} "
                   f"{p['effective_time_ratio']:>9.4f} "
                   f"{p['lost_steps']:>10d} {p['improvement_pct']:>8.2f}")
         for rate, f in sorted(res["frontier"].items()):

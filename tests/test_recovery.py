@@ -267,7 +267,7 @@ def test_soak_report_carries_decision_log():
 
     rep = run_soak(SoakConfig(ideal_days=2.0, n_nodes=8, n_spares=0,
                               mtbf_node_days=6.0, repair_hours=240.0,
-                              shrink_threshold=0.5, seed=0))
+                              shrink_threshold=0.5, seed=2))
     dec = rep["decisions"]
     assert dec["n"] == sum(dec["by_decision"].values()) > 0
     assert dec["by_decision"].get("shrink", 0) >= 1
@@ -281,7 +281,7 @@ def test_soak_planner_policy_is_runtime_selectable():
     from repro.sim.soak import SoakConfig, run_soak
 
     base = dict(ideal_days=2.0, n_nodes=8, n_spares=0, mtbf_node_days=6.0,
-                repair_hours=2.0, shrink_threshold=0.5, seed=0)
+                repair_hours=2.0, shrink_threshold=0.5, seed=1)
     shrinky = run_soak(SoakConfig(**base))
     waity = run_soak(SoakConfig(planner_policy="no_shrink", **base))
     assert shrinky["faults"]["injected"] == waity["faults"]["injected"]

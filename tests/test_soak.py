@@ -67,7 +67,7 @@ def test_transom_beats_manual_on_the_same_fault_timeline():
 
 def test_soak_shrinks_when_pool_dry_and_policy_allows():
     rep = run_soak(_cfg(ideal_days=2.0, n_spares=0, shrink_threshold=0.5,
-                        mtbf_node_days=6.0, repair_hours=240.0))
+                        mtbf_node_days=6.0, repair_hours=240.0, seed=1))
     assert rep["fleet"]["shrinks"] >= 1
     assert rep["fleet"]["final_active"] < 8
     assert rep["fleet"]["final_active"] >= 4     # floor = ceil(0.5 * 8)
@@ -75,7 +75,7 @@ def test_soak_shrinks_when_pool_dry_and_policy_allows():
 
 def test_soak_waits_for_repair_when_shrink_disabled():
     rep = run_soak(_cfg(ideal_days=2.0, n_spares=0, shrink_threshold=0.0,
-                        mtbf_node_days=6.0, repair_hours=2.0))
+                        mtbf_node_days=6.0, repair_hours=2.0, seed=1))
     assert rep["fleet"]["shrinks"] == 0
     assert rep["recovery"]["waits_for_repair"] >= 1
     assert rep["recovery"]["repair_wait_s"] > 0
@@ -92,7 +92,7 @@ def test_heavy_cascades_force_restores_down_the_waterfall():
     # the persistent store, alongside cache and backup restores
     rep = run_soak(_cfg(ideal_days=8.0, n_nodes=4, n_spares=6,
                         mtbf_node_days=2.0, p_cascade=1.0,
-                        cascade_window_s=300.0, seed=1))
+                        cascade_window_s=300.0, seed=2))
     assert rep["faults"]["cascades"] >= 1
     assert rep["faults"]["absorbed_in_recovery"] >= 1
     # the full waterfall was exercised: cache, ring backup, store
