@@ -1,110 +1,86 @@
-"""End-to-end driver: LM pre-training under the full TRANSOM closed loop.
+"""End-to-end demo: training survives SIGKILLs under the TRANSOM stack.
 
-A real jax training run (llama3-family reduced config) is protected by
-TOL (launcher FSM + error checks + anti-affinity reschedule), TEE (anomaly
-detection + node attribution), and TCE (async in-memory checkpoints + ring
-backup). Faults are injected mid-run: a GPU failure on one simulated node and
-a network fault on another. Training recovers automatically and the final
-loss trajectory is identical to an uninterrupted run.
+Drives the one Substrate API (``repro.substrate``) through the shared
+recovery loop (``run_protected``): TOL's launcher FSM and error checks, TEE
+anomaly attribution, planner-arbitrated replacement via the Topology claim
+ledger, and TCE checkpoint restore. Faults are scripted ``KillSpec``s; on
+the (default) process substrate each one SIGKILLs a live rank process
+running the real trainer, on the sim substrate it fails a modelled node —
+the driver cannot tell the difference, by design.
 
-    PYTHONPATH=src python examples/fault_tolerant_training.py           # ~2 min
-    PYTHONPATH=src python examples/fault_tolerant_training.py --full    # ~100M params, 300 steps
+After the protected run, an uninterrupted reference run proves loss-curve
+continuity: rewind-and-replay from real checkpoints reproduces the clean
+curve bit for bit.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py              # ~1 min
+    PYTHONPATH=src python examples/fault_tolerant_training.py --substrate sim
+    PYTHONPATH=src python examples/fault_tolerant_training.py --no-verify  # skip the reference run
 """
 import argparse
-import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.core.tol import JobConfig
-from repro.core.tol.cluster import NodeState
-from repro.core.tol.orchestrator import SimulatedFault
-from repro.data import SyntheticLMData
-from repro.models import ModelConfig
-from repro.sim.scenarios import build_substrate
-from repro.train import AdamConfig, TrainConfig, init_train_state, make_train_step
+from repro.substrate import build_substrate
+from repro.substrate.driver import DriveConfig, KillSpec, run_protected
 
 
-def build_config(full: bool) -> ModelConfig:
-    if full:
-        # ~100M-param llama-style model
-        return dataclasses.replace(
-            get_config("llama3-8b"), name="llama-100m",
-            n_layers=12, d_model=512, n_heads=8, n_kv_heads=8, d_head=64,
-            d_ff=2048, vocab_size=32768, scan_layers=True, remat=False)
-    return dataclasses.replace(
-        get_config("llama3-8b").reduced(), name="llama-tiny",
-        n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
-        d_ff=512, vocab_size=2048)
+def build(mode: str, steps: int):
+    if mode == "process":
+        return build_substrate("process", n_ranks=2, n_spares=2, seed=0,
+                               total_steps=steps, batch=4, seq=32)
+    return build_substrate("sim", n_nodes=4, n_spares=4)
+
+
+def drive(mode: str, steps: int, ckpt_every: int, kills=()):
+    sub = build(mode, steps)
+    try:
+        return run_protected(
+            sub, DriveConfig(total_steps=steps, ckpt_every=ckpt_every,
+                             scenario=f"example_{mode}"), kills)
+    finally:
+        sub.close()
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--substrate", default="process",
+                    choices=("process", "sim"))
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--ckpt-every", type=int, default=6)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the uninterrupted reference run")
     args = ap.parse_args()
 
-    cfg = build_config(args.full)
-    steps = args.steps or (300 if args.full else 120)
-    batch_size, seq = (8, 256) if args.full else (8, 64)
-    print(f"model: {cfg.name} ({cfg.n_params():,} params), {steps} steps")
+    kills = (KillSpec(args.steps * 3 // 8, 1),
+             KillSpec(args.steps * 5 // 7, 0, "network"))
+    what = ("2 real JAX rank processes (SIGKILL faults)"
+            if args.substrate == "process"
+            else "4 modelled nodes (failed-node faults)")
+    print(f"substrate: {args.substrate} — {what}")
+    print(f"kills scripted at steps {[k.step for k in kills]}; "
+          f"checkpoints every {args.ckpt_every} steps\n")
 
-    opt = AdamConfig(lr=1e-3, warmup_steps=steps // 10, decay_steps=steps)
-    data = SyntheticLMData(cfg.vocab_size, seq, batch_size, seed=0)
-    state0 = init_train_state(cfg, opt, jax.random.key(0))
-    inner = jax.jit(make_train_step(cfg, opt, TrainConfig()))
-    losses = []
+    rep = drive(args.substrate, args.steps, args.ckpt_every, kills)
 
-    def step_fn(state, step):
-        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
-        new_state, metrics = inner(state, batch)
-        losses.append((step, float(metrics["loss"])))
-        return new_state
-
-    # --- TRANSOM stack on the unified simulation substrate ------------------ #
-    # one SimClock + one Topology shared by TOL, TEE and TCE (repro.sim)
-    print("building substrate (TEE fit on normal traces) ...")
-    sub = build_substrate(n_nodes=4, n_spares=4, verbose=True)
-    cluster, op = sub.topology, sub.operator
-    assert sub.clock_identity_ok(), "subsystems must share one clock"
-
-    faults = {steps // 3: ("node_hw", 1), 2 * steps // 3: ("network", 2)}
-    fired = set()
-
-    def fault_hook(step):
-        if step in faults and step not in fired:
-            fired.add(step)
-            cat, rank = faults[step]
-            node = op.launchers[rank].node
-            cluster.nodes[node].state = NodeState.FAILED
-            cluster.nodes[node].fail_category = cat
-            print(f"\n*** injecting {cat} fault on rank {rank} ({node}) "
-                  f"at step {step} ***")
-            raise SimulatedFault(cat, rank)
-
-    report, final_state = op.run_job(
-        JobConfig(total_steps=steps, ckpt_every=max(steps // 12, 5),
-                  n_sim_nodes=4),
-        state0, step_fn, fault_hook=fault_hook)
-    op.tce.close()
-
-    print(f"\ncompleted={report.completed} steps={report.steps_done}")
-    print(f"restarts: in-place={report.restarts_inplace} "
-          f"rescheduled={report.restarts_resched} "
-          f"evicted={report.evicted_nodes}")
-    print(f"lost steps (recomputed): {report.lost_steps}")
-    print(f"mean modeled restart: {report.mean_restart_s/60:.1f} min "
-          f"(paper: ~12 min)")
-    print(f"modeled cluster time: {sub.clock.seconds:.1f} s on one shared clock")
-    print(f"anti-affinity registry: {sorted(sub.server.bad_nodes())}")
-    first = [l for s, l in losses if s < 10]
-    last = [l for s, l in losses[-10:]]
-    print(f"loss: {sum(first)/len(first):.3f} (start) -> "
-          f"{sum(last)/len(last):.3f} (end)")
+    print(f"completed={rep['completed']} steps={rep['steps_done']} "
+          f"lost_steps={rep['lost_steps']}")
+    print(f"restarts: in-place={rep['restarts']['inplace']} "
+          f"rescheduled={rep['restarts']['resched']} "
+          f"evicted={rep['evicted_nodes']}")
+    print(f"planner decisions: {rep['decisions']['by_decision']}")
+    print(f"modeled downtime: {rep['modeled']['downtime_s']:.0f} s "
+          f"({rep['modeled']['downtime_s']/60:.1f} min; paper: ~12 min/restart)")
+    print(f"final loss: {rep['final_loss']}")
     print("\nFSM history:")
-    for t, s, r in report.state_history:
+    for _t, s, r in rep["state_history"]:
         print(f"  {s:>16s}  {r[:60]}")
+
+    if not args.no_verify:
+        print("\nuninterrupted reference run (loss-continuity check) ...")
+        clean = drive(args.substrate, args.steps, args.ckpt_every)
+        same = clean["losses"] == rep["losses"]
+        print(f"loss curves identical: {same} "
+              f"(clean final loss: {clean['final_loss']})")
+        if not same:
+            raise SystemExit("continuity check FAILED")
 
 
 if __name__ == "__main__":

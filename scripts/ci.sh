@@ -54,6 +54,50 @@ done
 diff "$TMP/dec_a.json" "$TMP/dec_b.json" \
     || { echo "FAIL: planner decision logs are nondeterministic" >&2; exit 1; }
 
+echo "== substrate smoke: real-process ranks train through 2 SIGKILLs =="
+# the api_redesign capstone on the CI clock: a tiny real model, 2 subprocess
+# ranks, scripted SIGKILLs at steps 9 and 17, recovery via the shared
+# driver. Exit code 0 == the run completed. Two runs must agree byte-for-
+# byte once host wall-clock ("measured") is stripped.
+for run in a b; do
+    timeout 120 python -m repro.launch.train --substrate process --tiny \
+        --ranks 2 --spares 2 --steps 24 --ckpt-every 6 \
+        --inject-kills 9:1,17:0 --seed 0 --json "$TMP/proc_$run.json" \
+        > /dev/null \
+        || { echo "FAIL: process-substrate run did not complete" >&2; exit 1; }
+done
+python - "$TMP/proc_a.json" "$TMP/proc_b.json" <<'EOF'
+import json, sys
+for p in sys.argv[1:]:
+    d = json.load(open(p))
+    d.pop("measured", None)
+    json.dump(d, open(p + ".det", "w"), indent=1, sort_keys=True)
+EOF
+diff "$TMP/proc_a.json.det" "$TMP/proc_b.json.det" \
+    || { echo "FAIL: process-substrate reports are nondeterministic" >&2; exit 1; }
+
+echo "== shared report schema: every engine's reports validate =="
+python - "$TMP/scen_a.json" "$TMP/sweep_a.json" "$TMP/fleet_a.json" \
+        "$TMP/proc_a.json" <<'EOF'
+import json, sys
+from repro.report import validate
+n = 0
+for path in sys.argv[1:]:
+    reports = json.load(open(path))
+    for rep in (reports if isinstance(reports, list) else [reports]):
+        errs = validate(rep)
+        assert not errs, f"{path}: {errs}"
+        n += 1
+print(f"{n} reports conform to the shared schema")
+EOF
+
+echo "== one substrate API: recovery driver is isinstance-free =="
+# the driver must speak only the Substrate protocol; type dispatch would
+# break the sim-proves-process guarantee (also asserted in tests)
+if grep -n "isinstance(" src/repro/substrate/driver.py; then
+    echo "FAIL: substrate driver dispatches on substrate type" >&2; exit 1
+fi
+
 echo "== one recovery brain: no policy logic left in engine files =="
 # the decision table lives in src/repro/recovery/ only; engines must not
 # re-grow their old shrink-vs-wait/refill conditionals (grep-verifiable)

@@ -4,55 +4,27 @@
     python -m repro.fleet --run two_jobs_rack_outage --seed 0
     python -m repro.fleet --run all --json reports.json
 
+Flags and exit codes follow the shared convention in :mod:`repro.cli`.
 Reports are byte-identical across runs at the same seed (the CI determinism
 gate diffs two invocations).
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 from typing import List, Optional
+
+from repro.cli import catalog_main
 
 from .presets import PRESETS, run_preset
 
 
 def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.fleet",
+    return catalog_main(
+        argv, prog="python -m repro.fleet",
         description="Run multi-job fleet scenarios (shared topology, shared "
-                    "spare pool, contended NAS bandwidth).")
-    ap.add_argument("--list", action="store_true", help="list fleet presets")
-    ap.add_argument("--run", metavar="NAME", help="preset name, or 'all'")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the report(s) to this file")
-    args = ap.parse_args(argv)
-
-    if args.list or not args.run:
-        width = max(len(n) for n in PRESETS)
-        for name in sorted(PRESETS):
-            print(f"  {name:<{width}}  {PRESETS[name].description}")
-        print(f"\n{len(PRESETS)} fleet presets. "
-              f"Run one with: python -m repro.fleet --run <name>")
-        return 0
-
-    if args.run != "all" and args.run not in PRESETS:
-        print(f"error: unknown fleet preset {args.run!r} (see --list)",
-              file=sys.stderr)
-        return 2
-    names = sorted(PRESETS) if args.run == "all" else [args.run]
-    reports = []
-    for name in names:
-        rep = run_preset(name, seed=args.seed)
-        reports.append(rep)
-        print(json.dumps(rep, indent=2, sort_keys=True))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(reports if len(reports) > 1 else reports[0], f,
-                      indent=2, sort_keys=True)
-            f.write("\n")
-    return 0
+                    "spare pool, contended NAS bandwidth).",
+        catalog={n: p.description for n, p in PRESETS.items()},
+        run=run_preset, what="fleet presets")
 
 
 if __name__ == "__main__":

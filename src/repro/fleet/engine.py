@@ -706,8 +706,13 @@ class _FleetRun:
 
 def run_fleet(cfg: FleetConfig, seed: Optional[int] = None) -> dict:
     """Run one multi-job fleet simulation; returns its deterministic JSON
-    report. ``seed`` overrides ``cfg.seed``."""
-    return _FleetRun(cfg, cfg.seed if seed is None else seed).run()
+    report (shared schema, see :mod:`repro.report`). ``seed`` overrides
+    ``cfg.seed``."""
+    from repro.report import finalize
+
+    use_seed = cfg.seed if seed is None else seed
+    return finalize(_FleetRun(cfg, use_seed).run(), engine="fleet",
+                    seed=use_seed)
 
 
 def no_preemption(cfg: FleetConfig) -> FleetConfig:

@@ -183,7 +183,11 @@ def run_preset(name: str, seed: int = 0) -> dict:
     if name not in PRESETS:
         raise KeyError(f"unknown fleet preset {name!r}; have: "
                        f"{', '.join(sorted(PRESETS))}")
-    return PRESETS[name].run(seed)
+    from repro.report import finalize
+
+    # re-finalize: presets add keys on top of run_fleet's report, so the
+    # timeline digest must be recomputed over the final shape
+    return finalize(PRESETS[name].run(seed), scenario=name, seed=seed)
 
 
 def preset_names() -> List[str]:

@@ -1,28 +1,45 @@
-"""Production training driver.
+"""Production training driver — one CLI over three substrate modes.
 
+    # classic single-process training (real train step, TCE checkpoints):
     PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
         --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
 
-Runs the real train step (pjit on whatever mesh exists — 1 CPU device here,
-the production mesh on a pod), checkpoints through TCE asynchronously, and
-resumes from the freshest checkpoint on restart. The full fault-tolerant
-closed loop (TOL+TEE driving this loop) is examples/fault_tolerant_training.py.
+    # real multi-process ranks under the full TOL/TEE/planner recovery
+    # loop, with scripted SIGKILLs (the fault-tolerance capstone):
+    PYTHONPATH=src python -m repro.launch.train --substrate process --tiny \
+        --ranks 2 --spares 2 --steps 24 --ckpt-every 6 \
+        --inject-kills 9:1,17:0 --json /tmp/run.json
+
+    # the same protected run on the modelled cluster (seconds, no procs):
+    PYTHONPATH=src python -m repro.launch.train --substrate sim --ranks 4 \
+        --steps 40 --ckpt-every 10 --inject-kills 13:1,27:2
+
+``--substrate single`` (default) is the historical in-process loop: the
+real train step on whatever mesh exists, checkpointing through one local
+TCE rank (``TCEConfig(n_nodes=1, backup=False)`` — there is no ring to
+back up to), resuming from the freshest checkpoint with ``--resume``.
+
+``--substrate process|sim`` hand the run to the shared recovery driver
+(:func:`repro.substrate.driver.run_protected`): the substrate is built by
+:func:`repro.substrate.build_substrate` and the driver speaks only the
+Substrate protocol, so the two modes are interchangeable end to end.
+Exit code follows the shared convention: 0 iff the run completed.
 """
 from __future__ import annotations
 
-import argparse
 import dataclasses
+import json
+import sys
 import time
 
-import jax
-import numpy as np
+from repro.cli import (EXIT_FAILURE, EXIT_OK, EXIT_USAGE, base_parser,
+                       list_catalog, write_reports)
 
-from repro.configs import get_config
-from repro.core.tce import DiskStore, TCEngine, TCEConfig
-from repro.core.tce.engine import flatten_pytree, unflatten_like
-from repro.data import SyntheticLMData
-from repro.train import (AdamConfig, TrainConfig, init_train_state,
-                         make_train_step)
+SUBSTRATES = {
+    "single": "in-process training loop, local TCE checkpoints (--resume)",
+    "process": "real multi-process JAX ranks + TOL/TEE recovery driver",
+    "sim": "modelled cluster under the same recovery driver",
+}
 
 
 def scale_config(cfg, args):
@@ -33,33 +50,76 @@ def scale_config(cfg, args):
     return cfg
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_argparser():
+    ap = base_parser("python -m repro.launch.train",
+                     "Train a model, optionally under fault-tolerant "
+                     "recovery (substrate modes: single | process | sim).")
+    ap.add_argument("--substrate", default="single",
+                    choices=sorted(SUBSTRATES),
+                    help="where the ranks run (default: single)")
     ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the arch to its reduced test size")
     ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--tiny", action="store_true",
+                    help="shorthand for --reduced --layers 1 with a small "
+                         "batch/seq (fast smoke runs)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--ckpt-nodes", type=int, default=4)
-    ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: /tmp/repro_ckpt "
+                         "for single mode, a fresh tempdir otherwise)")
+    ap.add_argument("--codec", default="raw",
+                    help="TCE persist codec (raw|zlib|int8)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the freshest checkpoint (single mode)")
     ap.add_argument("--log-every", type=int, default=10)
-    args = ap.parse_args()
+    # protected-mode knobs (process/sim)
+    ap.add_argument("--ranks", type=int, default=2,
+                    help="gang size for process/sim substrates")
+    ap.add_argument("--spares", type=int, default=2,
+                    help="replacement pool size for process/sim substrates")
+    ap.add_argument("--inject-kills", default="", metavar="SPECS",
+                    help="scripted faults 'STEP:RANK[:CATEGORY],...' "
+                         "(process/sim modes)")
+    return ap
+
+
+def _apply_tiny(args) -> None:
+    if args.tiny:
+        args.reduced = True
+        args.layers = args.layers or 1
+        args.batch = min(args.batch, 2)
+        args.seq = min(args.seq, 16)
+
+
+# --------------------------------------------------------------------------- #
+def run_single(args) -> int:
+    """The historical in-process loop: real step fn, local TCE rank."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.tce import DiskStore, TCEConfig, TCEngine
+    from repro.core.tce.engine import unflatten_like
+    from repro.data import SyntheticLMData
+    from repro.train import (AdamConfig, TrainConfig, init_train_state,
+                             make_train_step)
 
     cfg = scale_config(get_config(args.arch), args)
     opt_cfg = AdamConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                          decay_steps=args.steps)
-    print(f"arch={cfg.name} params={cfg.n_params():,} devices={jax.device_count()}")
+    print(f"arch={cfg.name} params={cfg.n_params():,} "
+          f"devices={jax.device_count()}")
 
     state = init_train_state(cfg, opt_cfg, jax.random.key(args.seed))
     data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch, args.seed)
 
-    tce = TCEngine(TCEConfig(n_nodes=args.ckpt_nodes),
-                   DiskStore(args.ckpt_dir))
+    # one local rank, no ring: there is no second machine to back up to
+    tce = TCEngine(TCEConfig(n_nodes=1, backup=False, codec=args.codec),
+                   DiskStore(args.ckpt_dir or "/tmp/repro_ckpt"))
     start = 0
     if args.resume:
         try:
@@ -74,29 +134,93 @@ def main():
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, TrainConfig()),
                       donate_argnums=(0,))
     t0 = time.time()
+    final_loss = None
     for step in range(start, args.steps):
-        batch = {k: jax.numpy.asarray(v) for k, v in data.batch_at(step).items()}
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in data.batch_at(step).items()}
         if cfg.family == "encdec":
             batch["enc_embeds"] = jax.numpy.zeros(
                 (args.batch, cfg.encdec.enc_len, cfg.d_model), "float32")
         if cfg.family == "vlm":
             batch["vision_embeds"] = jax.numpy.zeros(
-                (args.batch, min(cfg.vlm.n_vision_tokens, args.seq), cfg.d_model),
-                "float32")
+                (args.batch, min(cfg.vlm.n_vision_tokens, args.seq),
+                 cfg.d_model), "float32")
         state, metrics = step_fn(state, batch)
+        final_loss = float(metrics["loss"])
         if (step + 1) % args.log_every == 0 or step == start:
-            print(f"step {step+1:5d} loss={float(metrics['loss']):.4f} "
+            print(f"step {step+1:5d} loss={final_loss:.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"lr={float(metrics['lr']):.2e} "
                   f"({(time.time()-t0)/(step-start+1):.2f}s/step)")
         if (step + 1) % args.ckpt_every == 0:
             h = tce.save(step + 1, state)
-            print(f"  tce.save(step={step+1}) cache={h.cache_wall_s*1e3:.0f}ms "
+            print(f"  tce.save(step={step+1}) "
+                  f"cache={h.cache_wall_s*1e3:.0f}ms "
                   f"(async persist in background)")
     tce.reconciler.quiesce(60)
     tce.close()
+    if args.json or args.out:
+        from repro.report import finalize
+        rep = finalize({"completed": True, "steps_done": args.steps,
+                        "total_steps": args.steps, "arch": cfg.name,
+                        "final_loss": final_loss,
+                        "measured": {"wall_s": round(time.time() - t0, 3)}},
+                       engine="train", scenario="single", seed=args.seed)
+        write_reports([rep], json_path=args.json, out_dir=args.out)
     print("done.")
+    return EXIT_OK
+
+
+# --------------------------------------------------------------------------- #
+def run_protected_mode(args) -> int:
+    """process/sim substrates under the shared recovery driver."""
+    from repro.substrate import build_substrate
+    from repro.substrate.driver import DriveConfig, KillSpec, run_protected
+
+    try:
+        kills = KillSpec.parse_list(args.inject_kills)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+
+    if args.substrate == "process":
+        sub = build_substrate(
+            "process", n_ranks=args.ranks, n_spares=args.spares,
+            ckpt_dir=args.ckpt_dir, seed=args.seed, arch=args.arch,
+            layers=args.layers or 1, batch=args.batch, seq=args.seq,
+            lr=args.lr, total_steps=args.steps, codec=args.codec)
+    else:
+        sub = build_substrate("sim", n_nodes=args.ranks,
+                              n_spares=args.spares,
+                              store_root=args.ckpt_dir)
+    cfg = DriveConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      seed=args.seed,
+                      scenario=f"train_{args.substrate}")
+    try:
+        rep = run_protected(sub, cfg, kills)
+    finally:
+        sub.close()
+    shown = {k: rep[k] for k in ("engine", "scenario", "seed", "completed",
+                                 "steps_done", "lost_steps", "restarts",
+                                 "final_loss", "timeline_digest")}
+    shown["decisions"] = rep["decisions"]["by_decision"]
+    print(json.dumps(shown, indent=2, sort_keys=True))
+    write_reports([rep], json_path=args.json, out_dir=args.out)
+    return EXIT_OK if rep["completed"] else EXIT_FAILURE
+
+
+def main(argv=None) -> int:
+    args = build_argparser().parse_args(argv)
+    if args.list:
+        return list_catalog(
+            SUBSTRATES, prog="python -m repro.launch.train",
+            what="substrate modes",
+            hint="python -m repro.launch.train --substrate <name>")
+    _apply_tiny(args)
+    if args.substrate == "single":
+        return run_single(args)
+    return run_protected_mode(args)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -25,8 +25,6 @@ builds on the fleet engine and may import from ``repro.fleet``.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
@@ -130,15 +128,17 @@ def run_replay(name: str, seed: int = 0,
     if planner_policy is not None:
         preset = _dc_replace(preset, planner_policy=planner_policy)
     mix = get_mix(preset.mix)
+    from repro.report import finalize
+
     rep = run_fleet(preset.build(seed), seed=seed)
-    return dict(
+    return finalize(dict(
         rep, replay=name,
         mix={"name": mix.name, "source": mix.source,
              "weights": dict(mix.weights),
              "mtbf_node_days": mix.mtbf_node_days,
              "rack_mtbf_days": mix.rack_mtbf_days},
         scale=preset.scale,
-        planner_policy=preset.planner_policy)
+        planner_policy=preset.planner_policy), scenario=name, seed=seed)
 
 
 def preset_names() -> List[str]:
@@ -146,50 +146,28 @@ def preset_names() -> List[str]:
 
 
 def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.sim.replay",
-        description="Replay empirical failure mixes through the fleet "
-                    "engine at 64 / 1k / 10k-node scale.")
-    ap.add_argument("--list", action="store_true", help="list replay presets")
-    ap.add_argument("--run", metavar="NAME", help="preset name, or 'all'")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--planner", choices=("transom", "cost", "no_shrink"),
-                    default=None, help="override the planner policy")
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the report(s) to this file")
-    args = ap.parse_args(argv)
+    from repro.cli import catalog_main
 
-    if args.list or not args.run:
-        width = max(len(n) for n in REPLAY_PRESETS)
-        for name in sorted(REPLAY_PRESETS):
-            print(f"  {name:<{width}}  {REPLAY_PRESETS[name].description}")
-        print(f"\n{len(REPLAY_PRESETS)} replay presets. "
-              f"Run one with: python -m repro.sim.replay --run <name>")
-        return 0
-
-    if args.run != "all" and args.run not in REPLAY_PRESETS:
-        print(f"error: unknown replay preset {args.run!r} (see --list)",
-              file=sys.stderr)
-        return 2
-    names = sorted(REPLAY_PRESETS) if args.run == "all" else [args.run]
-    reports = []
-    for name in names:
-        rep = run_replay(name, seed=args.seed, planner_policy=args.planner)
-        reports.append(rep)
-        summary = {
+    def summarize(rep: dict) -> dict:
+        return {
             "replay": rep["replay"], "scale": rep["scale"],
             "makespan_days": rep["makespan_days"],
             "utilization": rep["fleet"]["utilization"],
             "faults_injected": rep["faults"]["injected"],
             "faults_hit_jobs": rep["faults"]["hit_jobs"],
         }
-        print(json.dumps(summary, indent=2, sort_keys=True))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(reports if len(reports) > 1 else reports[0], f,
-                      indent=2, sort_keys=True)
-            f.write("\n")
-    return 0
+
+    return catalog_main(
+        argv, prog="python -m repro.sim.replay",
+        description="Replay empirical failure mixes through the fleet "
+                    "engine at 64 / 1k / 10k-node scale.",
+        catalog={n: p.description for n, p in REPLAY_PRESETS.items()},
+        run=run_replay, what="replay presets",
+        add_args=lambda ap: ap.add_argument(
+            "--planner", choices=("transom", "cost", "no_shrink"),
+            default=None, help="override the planner policy"),
+        run_kwargs=lambda args: {"planner_policy": args.planner},
+        summarize=summarize)
 
 
 if __name__ == "__main__":

@@ -27,89 +27,25 @@ Usage:
 """
 from __future__ import annotations
 
-import argparse
 import functools
-import json
 import sys
-import tempfile
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .clock import EventQueue, SimClock
-from .topology import NodeState, Topology
+from .clock import EventQueue
+from .topology import NodeState
 
 
 # --------------------------------------------------------------------------- #
-# Substrate: the one-of-everything bundle
+# Substrate: the one-of-everything bundle. Promoted to the first-class
+# repro.substrate package in PR 7; re-exported here because tests,
+# benchmarks and examples historically import it from this module.
 # --------------------------------------------------------------------------- #
-@dataclass
-class Substrate:
-    """The full TRANSOM stack wired onto one clock / topology / fault model."""
-    clock: SimClock
-    topology: Topology
-    fabric: "object"          # repro.core.tce.transport.Fabric
-    store: "object"           # repro.core.tce.store.NASStore
-    tce: "object"             # repro.core.tce.engine.TCEngine
-    tee: Optional["object"]   # repro.core.tee.service.TEEService
-    server: "object"          # repro.core.tol.server.TransomServer
-    operator: "object"        # repro.core.tol.orchestrator.TransomOperator
-
-    def clock_identity_ok(self) -> bool:
-        """True iff every subsystem ticks on the *same* SimClock object."""
-        clocks = [self.operator.clock, self.tce.clock, self.fabric.clock,
-                  self.store.clock, self.topology.clock,
-                  self.tce.reconciler.clock]
-        return all(c is self.clock for c in clocks)
-
-    def close(self) -> None:
-        # the operator may have rebuilt the engine (elastic shrink/grow);
-        # close the live one, not the original handle
-        self.operator.tce.close()
-        if self.tce is not self.operator.tce:
-            self.tce.close()
-
-
-@functools.lru_cache(maxsize=4)
-def _fitted_tee(n_ranks: int, seed: int = 1):
-    """TEE model ensemble fitted on normal traces (cached: deterministic and
-    shared across scenario runs in one process)."""
-    from repro.core.tee import OfflineTrainer, TraceGenerator
-
-    gen = TraceGenerator(n_ranks=n_ranks, seed=seed)
-    return OfflineTrainer().fit([gen.normal() for _ in range(8)])
-
-
-def build_substrate(n_nodes: int = 4, n_spares: int = 4,
-                    nodes_per_rack: int = 2, store_root: Optional[str] = None,
-                    with_tee: bool = True, verbose: bool = False,
-                    nas_bw: float = 1e9) -> Substrate:
-    """Build the full closed-loop stack on a single shared clock/topology.
-
-    This is THE way to stand up TRANSOM-in-simulation: tests, benchmarks and
-    examples all come through here so there is exactly one SimClock and one
-    Topology per run (asserted by ``Substrate.clock_identity_ok``).
-    """
-    from repro.core.tce import NASStore, TCEConfig, TCEngine
-    from repro.core.tce.transport import Fabric
-    from repro.core.tee import TEEService
-    from repro.core.tol import TransomOperator, TransomServer
-
-    clock = SimClock()
-    topology = Topology(n_nodes, n_spares=n_spares,
-                        nodes_per_rack=nodes_per_rack, clock=clock)
-    store = NASStore(store_root or tempfile.mkdtemp(prefix="transom_sim_"),
-                     bw_per_rank=nas_bw, clock=clock)
-    fabric = Fabric(clock=clock, topology=topology)
-    tce = TCEngine(TCEConfig(n_nodes=n_nodes), store, fabric=fabric,
-                   clock=clock, topology=topology)
-    tee = TEEService(_fitted_tee(n_ranks=n_nodes)) if with_tee else None
-    server = TransomServer()
-    operator = TransomOperator(server, topology, tce, tee, clock=clock,
-                               verbose=verbose)
-    return Substrate(clock, topology, fabric, store, tce, tee, server,
-                     operator)
+from repro.substrate.sim import (SimSubstrate as Substrate,  # noqa: F401
+                                 _fitted_tee,
+                                 build_sim_substrate as build_substrate)
 
 
 # --------------------------------------------------------------------------- #
@@ -581,45 +517,18 @@ def run_scenario(name: str, seed: int = 0) -> dict:
     if name not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; have: "
                        f"{', '.join(sorted(SCENARIOS))}")
-    return SCENARIOS[name].run(seed)
+    from repro.report import finalize
+    return finalize(SCENARIOS[name].run(seed), scenario=name, seed=seed)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.sim.scenarios",
+    from repro.cli import catalog_main
+    return catalog_main(
+        argv, prog="python -m repro.sim.scenarios",
         description="Run named TEE->TOL->TCE fault scenarios on the unified "
-                    "simulation substrate.")
-    ap.add_argument("--list", action="store_true", help="list scenarios")
-    ap.add_argument("--run", metavar="NAME",
-                    help="scenario name, or 'all'")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", metavar="PATH",
-                    help="also write the report(s) to this file")
-    args = ap.parse_args(argv)
-
-    if args.list or not args.run:
-        width = max(len(n) for n in SCENARIOS)
-        for name in sorted(SCENARIOS):
-            print(f"  {name:<{width}}  {SCENARIOS[name].description}")
-        print(f"\n{len(SCENARIOS)} scenarios. "
-              f"Run one with: python -m repro.sim.scenarios --run <name>")
-        return 0
-
-    if args.run != "all" and args.run not in SCENARIOS:
-        print(f"error: unknown scenario {args.run!r} "
-              f"(see --list)", file=sys.stderr)
-        return 2
-    names = sorted(SCENARIOS) if args.run == "all" else [args.run]
-    reports = []
-    for name in names:
-        rep = run_scenario(name, seed=args.seed)
-        reports.append(rep)
-        print(json.dumps(rep, indent=2, sort_keys=True))
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(reports if len(reports) > 1 else reports[0], f,
-                      indent=2, sort_keys=True)
-    return 0
+                    "simulation substrate.",
+        catalog={n: s.description for n, s in SCENARIOS.items()},
+        run=run_scenario, what="scenarios")
 
 
 if __name__ == "__main__":

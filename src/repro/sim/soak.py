@@ -513,7 +513,11 @@ def run_soak(cfg: SoakConfig, seed: Optional[int] = None) -> dict:
     the cluster/fault knobs and the seed (not the policy), so two policies
     at the same seed face the same fault timeline.
     """
-    return _SoakRun(cfg, cfg.seed if seed is None else seed).run()
+    from repro.report import finalize
+
+    use_seed = cfg.seed if seed is None else seed
+    return finalize(_SoakRun(cfg, use_seed).run(), engine="soak",
+                    seed=use_seed)
 
 
 def run_multi_job_soak(job_sizes=(8, 8), ideal_days: float = 7.0,

@@ -26,9 +26,7 @@ Output is byte-identical across runs with the same seed (enforced in CI).
 """
 from __future__ import annotations
 
-import argparse
 import itertools
-import json
 import sys
 from dataclasses import replace
 from typing import Dict, List, Optional
@@ -162,7 +160,9 @@ def run_sweep(grid: str = "default", seed: int = 0,
             "effective_time_ratio": best["effective_time_ratio"],
             "improvement_pct": best["improvement_pct"],
         }
-    return {
+    from repro.report import finalize
+
+    return finalize({
         "engine": "sweep",
         "grid": grid,
         "seed": seed,
@@ -171,23 +171,28 @@ def run_sweep(grid: str = "default", seed: int = 0,
         "n_points": len(points),
         "points": points,
         "frontier": frontier,
-    }
+    }, scenario=grid, seed=seed)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
-    ap = argparse.ArgumentParser(
+    from repro.cli import base_parser, list_catalog, write_reports
+
+    ap = base_parser(
         prog="python -m repro.sim.sweep",
         description="Policy sweep (TRANSOM vs manual baseline) over the "
                     "time-triggered soak engine.")
     ap.add_argument("--grid", default="default", choices=sorted(GRIDS))
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ideal-days", type=float, default=None,
                     help="override the grid's ideal compute days")
-    ap.add_argument("--json", metavar="PATH",
-                    help="write the full matrix to this file")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the stdout table")
     args = ap.parse_args(argv)
+
+    if args.list:
+        return list_catalog(
+            {g: f"{len(GRIDS[g])} axes" for g in GRIDS},
+            prog="python -m repro.sim.sweep", what="sweep grids",
+            hint="python -m repro.sim.sweep --grid <name>")
 
     res = run_sweep(args.grid, seed=args.seed, ideal_days=args.ideal_days)
     if not args.quiet:
@@ -210,10 +215,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"spares={f['policy']['spare_pool']} "
                   f"eff={f['effective_time_ratio']:.4f} "
                   f"improve={f['improvement_pct']:.2f}%")
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(res, f, indent=2, sort_keys=True)
-            f.write("\n")
+    write_reports([res], json_path=args.json, out_dir=args.out,
+                  name_key="grid")
     return 0
 
 

@@ -1,0 +1,57 @@
+"""repro.substrate — one Substrate API for simulated and real training.
+
+The fault-tolerance stack (TOL orchestration, TEE attribution, the shared
+RecoveryPlanner) drives a *substrate* through one protocol
+(:class:`~repro.substrate.base.Substrate`):
+
+    start_ranks / health / kill / save_via_tce / restore_via_tce /
+    step_metrics
+
+with two interchangeable implementations:
+
+* ``SimSubstrate``     — the modelled cluster (one SimClock/Topology, the
+                         historical ``repro.sim.scenarios`` stack);
+* ``ProcessSubstrate`` — real multi-process JAX ranks (subprocess workers
+                         on CPU), real pytrees through the TCE DiskStore
+                         datapath, faults injected by SIGKILL.
+
+``build_substrate(mode=...)`` is the one front door; the shared recovery
+driver is :func:`repro.substrate.driver.run_protected`.
+"""
+from __future__ import annotations
+
+from .base import FaultNotice, RankHealth, StepSlice, Substrate
+from .sim import SimSubstrate, build_sim_substrate
+
+__all__ = [
+    "Substrate", "RankHealth", "FaultNotice", "StepSlice",
+    "SimSubstrate", "ProcessSubstrate",
+    "build_sim_substrate", "build_substrate",
+]
+
+
+def __getattr__(name: str):
+    # ProcessSubstrate drags in subprocess/worker machinery; keep the
+    # package importable (and --list fast) without it
+    if name == "ProcessSubstrate":
+        from .process import ProcessSubstrate
+        return ProcessSubstrate
+    raise AttributeError(name)
+
+
+def build_substrate(mode: str = "sim", **kwargs):
+    """One front door for both substrates.
+
+    ``mode="sim"``     -> :func:`build_sim_substrate` kwargs (n_nodes,
+                          n_spares, nodes_per_rack, store_root, with_tee,
+                          verbose, nas_bw).
+    ``mode="process"`` -> :class:`ProcessSubstrate` kwargs (n_ranks,
+                          n_spares, ckpt_dir, seed, spec, ...).
+    """
+    if mode == "sim":
+        return build_sim_substrate(**kwargs)
+    if mode == "process":
+        from .process import ProcessSubstrate
+        return ProcessSubstrate(**kwargs)
+    raise ValueError(f"unknown substrate mode {mode!r} "
+                     f"(expected 'sim' or 'process')")
