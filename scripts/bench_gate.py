@@ -25,6 +25,14 @@ fails (exit 1) on regression. The artifact kind is auto-detected:
   measured check (20x hot-loop speedup at 1k, 10k-node month replay under
   60 s) went false. Timings themselves are not compared across hosts — the
   speedup check is a same-machine A/B.
+* ``BENCH_tee.json`` (``benchmarks/tee_bench.py --json``): fails if the
+  streaming TEE's per-category verdicts (fired counts, firing windows,
+  detection latencies, confidences) drifted from the baseline (the detector
+  must stay deterministic), precision/recall regressed, the degrading-switch
+  scenario no longer folds into exactly ONE domain incident, or any measured
+  check (streaming==batch equivalence, >= 3x vectorized-pass speedup over
+  the production per-job loop, >= 1.2x over the numpy per-rank loop,
+  256-job streaming fleet wall bound) went false.
 
 Usage:
 
@@ -45,6 +53,7 @@ DEFAULT_BASELINE = os.path.join(_BASE_DIR, "BENCH_fig6.json")
 FLEET_BASELINE = os.path.join(_BASE_DIR, "BENCH_fleet.json")
 TCE_BASELINE = os.path.join(_BASE_DIR, "BENCH_tce.json")
 SIM_BASELINE = os.path.join(_BASE_DIR, "BENCH_sim.json")
+TEE_BASELINE = os.path.join(_BASE_DIR, "BENCH_tee.json")
 
 
 def _point_key(point: dict) -> Tuple:
@@ -166,6 +175,50 @@ def gate_sim(fresh: dict, baseline: dict,
     return fails
 
 
+def gate_tee(fresh: dict, baseline: dict,
+             tolerance: float = 0.05) -> List[str]:
+    """Streaming-TEE gate. Detection behavior (per-category verdicts,
+    equivalence counts, the one-incident correlator outcome) is compared
+    exactly; host-dependent timings are not — the artifact's own checks
+    carry the speedup/wall-time bars."""
+    fails: List[str] = []
+    old_d, new_d = baseline["detection"], fresh.get("detection", {})
+    new_cats = new_d.get("per_category", {})
+    for cat, bp in old_d["per_category"].items():
+        np_ = new_cats.get(cat)
+        if np_ is None:
+            fails.append(f"fault category {cat!r} missing from fresh bench")
+            continue
+        for field in ("n", "fired", "windows", "latency_samples",
+                      "confidences"):
+            if np_.get(field) != bp[field]:
+                fails.append(
+                    f"streaming verdicts changed for {cat!r}: {field} "
+                    f"{bp[field]!r} -> {np_.get(field)!r} (detector no "
+                    f"longer deterministic, or a silent behavior change)")
+    for field in ("precision", "recall"):
+        old, new = old_d[field], new_d.get(field, 0.0)
+        if new < old - tolerance:
+            fails.append(f"catalog {field} regressed: "
+                         f"{old:.4f} -> {new:.4f}")
+    if new_d.get("equivalence") != old_d["equivalence"]:
+        fails.append(f"streaming==batch equivalence counts changed: "
+                     f"{old_d['equivalence']!r} -> "
+                     f"{new_d.get('equivalence')!r}")
+    sw = fresh.get("degrading_switch", {})
+    if sw.get("n_domain_incidents") != 1:
+        fails.append(f"degrading switch no longer folds into ONE domain "
+                     f"incident: got {sw.get('n_domain_incidents')!r}")
+    if "dense_fleet" in baseline and "dense_fleet" in fresh:
+        if fresh["dense_fleet"] != baseline["dense_fleet"]:
+            fails.append("dense 256-job streaming-fleet summary drifted "
+                         "from baseline")
+    for name, ok in fresh.get("measured", {}).get("checks", {}).items():
+        if not ok:
+            fails.append(f"tee check {name!r} went false")
+    return fails
+
+
 def gate_any(fresh: dict, baseline: dict,
              tolerance: float = 0.05) -> List[str]:
     """Dispatch on artifact kind (the ``bench`` tag)."""
@@ -180,6 +233,8 @@ def gate_any(fresh: dict, baseline: dict,
         return gate_tce(fresh, baseline, tolerance=tolerance)
     if kind_f == "sim":
         return gate_sim(fresh, baseline, tolerance=tolerance)
+    if kind_f == "tee":
+        return gate_tee(fresh, baseline, tolerance=tolerance)
     return gate(fresh, baseline, tolerance=tolerance)
 
 
@@ -199,7 +254,8 @@ def main(argv=None) -> int:
     if baseline_path is None:
         baseline_path = {"fleet": FLEET_BASELINE,
                          "tce": TCE_BASELINE,
-                         "sim": SIM_BASELINE}.get(fresh.get("bench"),
+                         "sim": SIM_BASELINE,
+                         "tee": TEE_BASELINE}.get(fresh.get("bench"),
                                                   DEFAULT_BASELINE)
     with open(baseline_path) as f:
         baseline = json.load(f)
@@ -219,6 +275,18 @@ def main(argv=None) -> int:
               f"{fresh['datapath']['copy_reduction_x']:.1f}x fewer copies/save, "
               f"stall ratio "
               f"{fresh['measured']['stall_ratio_new_over_legacy']:.2f}")
+    elif fresh.get("bench") == "tee":
+        d = fresh["detection"]
+        bits = [f"streaming==batch on "
+                f"{d['equivalence']['agree']}/{d['equivalence']['total']} "
+                f"catalog traces",
+                f"precision {d['precision']:.2f} recall {d['recall']:.2f}",
+                "one domain incident under the degrading switch"]
+        ab = fresh.get("measured", {}).get("fleet_scale_ab")
+        if ab:
+            bits.append(f"10k-rank pass {ab['speedup_vs_jobloop_x']:.1f}x "
+                        f"over the per-job loop")
+        print("bench gate OK: " + "; ".join(bits))
     elif fresh.get("bench") == "sim":
         hot = fresh["measured"]["hot_loop"]
         walls = fresh["measured"]["walls"]

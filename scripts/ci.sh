@@ -155,6 +155,22 @@ diff "$TMP/BENCH_sim.json.det" "$TMP/BENCH_sim_b.json.det" \
     || { echo "FAIL: sim bench is nondeterministic" >&2; exit 1; }
 python scripts/bench_gate.py "$TMP/BENCH_sim.json"
 
+echo "== bench regression gate: Eagle Eye streaming TEE vs committed baseline =="
+python benchmarks/tee_bench.py --quiet --json "$TMP/BENCH_tee.json"
+python benchmarks/tee_bench.py --quiet --json "$TMP/BENCH_tee_b.json"
+# verdicts/latencies/confidences must be byte-identical across runs;
+# wall-clock timings live under "measured" and are host-dependent — strip
+python - "$TMP/BENCH_tee.json" "$TMP/BENCH_tee_b.json" <<'EOF'
+import json, sys
+for p in sys.argv[1:]:
+    d = json.load(open(p))
+    d.pop("measured", None)
+    json.dump(d, open(p + ".det", "w"), indent=1, sort_keys=True)
+EOF
+diff "$TMP/BENCH_tee.json.det" "$TMP/BENCH_tee_b.json.det" \
+    || { echo "FAIL: tee bench is nondeterministic" >&2; exit 1; }
+python scripts/bench_gate.py "$TMP/BENCH_tee.json"
+
 # every scenario (incl. weeklong_soak / policy_frontier and the fleet
 # presets) already ran twice in the determinism gates; just confirm the
 # catalog CLIs render

@@ -66,6 +66,29 @@ class LOF:
         lrd = 1.0 / (np.mean(reach, 1) + 1e-12)
         return np.mean(self._lrd_fit[idx], 1) / (lrd + 1e-12)
 
+    def score_batch(self, x: np.ndarray, chunk: int = 384) -> np.ndarray:
+        """Fleet-scale scoring: same values as :meth:`score` (every
+        reduction over the k-NN set is order-free, and partitioning squared
+        distances selects the same neighbours as sorting true distances)
+        without the full-row argsort or one giant distance matrix —
+        chunked so temporaries stay cache-sized at 100k+ test points."""
+        assert self._fit is not None, "call fit() first"
+        x = np.asarray(x, np.float64)
+        n = x.shape[0]
+        k = min(self.k, self._fit.shape[0] - 1)
+        fit_sq = np.sum(self._fit * self._fit, 1)[None, :]
+        out = np.empty(n)
+        for c0 in range(0, n, chunk):
+            xc = x[c0:c0 + chunk]
+            d2 = np.maximum(np.sum(xc * xc, 1)[:, None] + fit_sq
+                            - 2 * xc @ self._fit.T, 0.0)
+            idx = np.argpartition(d2, k - 1, axis=1)[:, :k]
+            kd = np.sqrt(np.take_along_axis(d2, idx, 1))
+            reach = np.maximum(kd, self._kdist_fit[idx])
+            lrd = 1.0 / (np.mean(reach, 1) + 1e-12)
+            out[c0:c0 + chunk] = np.mean(self._lrd_fit[idx], 1) / (lrd + 1e-12)
+        return out
+
 
 # --------------------------------------------------------------------------- #
 # KNN matrix profile (NeighborProfile)
@@ -114,6 +137,36 @@ class NeighborProfile:
         nn = np.sort(d, 1)[:, :k]
         return nn.mean(1) / np.sqrt(self.m)
 
+    def score_batch(self, xs: np.ndarray, chunk: int = 512) -> np.ndarray:
+        """Per-subsequence scores for a whole batch of 1-D series at once.
+
+        ``xs``: (B, T) -> (B, n_sub); row ``b`` equals ``score(xs[b])``.
+        Partitions *squared* distances (sqrt is monotone, so the k-NN set
+        is identical) and chunks the query rows so the distance matrix
+        never exceeds cache-friendly size at fleet scale.
+        """
+        assert self._bank is not None, "call fit() first"
+        xs = np.asarray(xs, np.float64)
+        B, T = xs.shape
+        n_sub = T - self.m + 1
+        if n_sub <= 0:
+            return np.zeros((B, 0))
+        subs = np.lib.stride_tricks.sliding_window_view(
+            xs, self.m, axis=1).astype(np.float64)
+        mu = subs.mean(-1, keepdims=True)
+        sd = subs.std(-1, keepdims=True)
+        q = ((subs - mu) / np.maximum(sd, 1e-6)).reshape(B * n_sub, self.m)
+        bank_sq = np.sum(self._bank * self._bank, 1)[None, :]
+        k = min(self.k, self._bank.shape[0])
+        out = np.empty(B * n_sub)
+        for c0 in range(0, q.shape[0], chunk):
+            qc = q[c0:c0 + chunk]
+            d2 = np.maximum(np.sum(qc * qc, 1)[:, None] + bank_sq
+                            - 2 * qc @ self._bank.T, 0.0)
+            nn2 = np.partition(d2, k - 1, axis=1)[:, :k]
+            out[c0:c0 + chunk] = np.sqrt(nn2).mean(1) / np.sqrt(self.m)
+        return out.reshape(B, n_sub)
+
 
 # --------------------------------------------------------------------------- #
 # DTW + KNN clustering across ranks
@@ -161,6 +214,51 @@ class DTWKNNCluster:
         mad = np.median(np.abs(s - med)) + 1e-9
         z = (s - med) / (1.4826 * mad)
         return [int(i) for i in np.where(z > self.z_thresh)[0]]
+
+
+# --------------------------------------------------------------------------- #
+# Vectorized batch consistency (the fleet-scale streaming path)
+# --------------------------------------------------------------------------- #
+def rank_deviation_scores(series: np.ndarray) -> np.ndarray:
+    """Vectorized cross-rank consistency scores.
+
+    ``series``: (..., n_ranks, T) activity. Each rank's series is
+    z-normalised (the same normalisation DTW effectively compares under)
+    and scored by its RMS deviation from the cross-rank median profile —
+    the batched stand-in for :meth:`DTWKNNCluster.rank_scores`: identical
+    "far from the cluster consensus" semantics, one numpy pass over
+    jobs x ranks x time instead of a per-pair Python DTW loop.
+    """
+    x = np.asarray(series, np.float64)
+    mu = x.mean(-1, keepdims=True)
+    sd = np.maximum(x.std(-1, keepdims=True), 1e-6)
+    z = (x - mu) / sd
+    consensus = np.median(z, axis=-2, keepdims=True)
+    return np.sqrt(np.mean((z - consensus) ** 2, axis=-1))
+
+
+def consistency_outlier_mask(series: np.ndarray,
+                             z_thresh: float = 3.0) -> np.ndarray:
+    """(..., n_ranks, T) -> bool (..., n_ranks): ranks whose deviation
+    score is a robust-z outlier among their job's ranks (the same
+    median/MAD rule as :meth:`DTWKNNCluster.outlier_ranks`)."""
+    s = rank_deviation_scores(series)
+    med = np.median(s, axis=-1, keepdims=True)
+    mad = np.median(np.abs(s - med), axis=-1, keepdims=True) + 1e-9
+    z = (s - med) / (1.4826 * mad)
+    return z > z_thresh
+
+
+def flatline_mask(activity: np.ndarray, frac: float = 0.25) -> np.ndarray:
+    """(..., n_ranks, W) raw activity -> bool (..., n_ranks): ranks whose
+    mean activity collapses below ``frac`` x the job median while the
+    median itself stays alive — the batched form of
+    ``TEEService._flatline_ranks`` (median < 0.1 means the whole job is
+    down: a job-level event, so no rank is singled out)."""
+    act = np.asarray(activity, np.float64)
+    level = act.mean(-1)
+    med = np.median(level, axis=-1, keepdims=True)
+    return (level < frac * med) & (med >= 0.1)
 
 
 # --------------------------------------------------------------------------- #

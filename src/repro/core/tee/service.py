@@ -41,7 +41,18 @@ class TEEService:
     # ------------------------------------------------------------------ #
     def detect_window(self, trace: TaskTrace, t0: int, t1: int) -> TEEVerdict:
         """Score one [t0, t1) window (absolute timestamps incl. init)."""
-        m = self.m.pre.apply(trace.metrics[:, t0:t1, :], 0)
+        return self.score_window(trace.metrics[:, t0:t1, :], trace.logs,
+                                 t0, t1)
+
+    def score_window(self, win: np.ndarray,
+                     logs: List[Tuple[int, int, str, str]],
+                     t0: int, t1: int) -> TEEVerdict:
+        """Score one already-sliced window: ``win`` is the raw
+        (n_ranks, t1-t0, n_metrics) slice, ``logs`` any superset of the
+        job's logs (filtered to [t0, t1) here). This is the entrypoint the
+        streaming scorer (:mod:`repro.tee_stream`) feeds ring-buffered
+        windows through — same math as :meth:`detect_window`."""
+        m = self.m.pre.apply(win, 0)
         votes: Dict[str, bool] = {}
         detail: Dict[str, float] = {}
 
@@ -61,7 +72,7 @@ class TEEService:
         out_ranks = self.cluster.outlier_ranks(m[:, :, 0])
         votes["cluster"] = len(out_ranks) > 0
 
-        lv = self.log_det.detect(trace.logs, t0, t1)
+        lv = self.log_det.detect(logs, t0, t1)
         votes["log"] = lv.anomalous
         detail["err_count"] = float(lv.err_count)
 
@@ -72,9 +83,18 @@ class TEEService:
         if lv.first_error_rank is not None:
             bad.append(lv.first_error_rank)
         bad += [r for r in out_ranks if r not in bad]
-        bad += [r for r in self._flatline_ranks(trace.metrics[:, t0:t1, :])
-                if r not in bad]
+        bad += [r for r in self._flatline_ranks(win) if r not in bad]
         return TEEVerdict(anomalous, votes, tuple(bad), (t0, t1), detail)
+
+    @staticmethod
+    def window_starts(T: int, init_len: int, window: int,
+                      stride: int) -> range:
+        """The scan schedule shared by batch :meth:`detect_task` and the
+        streaming scorer (:mod:`repro.tee_stream`): window starts from
+        ``init_len`` stepping by ``stride`` while a (possibly clipped)
+        window fits — keeping both paths firing on identical windows is a
+        pinned contract (tests/test_tee.py)."""
+        return range(init_len, max(T - window + 1, init_len + 1), stride)
 
     def detect_task(self, trace: TaskTrace, stride: Optional[int] = None
                     ) -> TEEVerdict:
@@ -84,7 +104,7 @@ class TEEService:
         stride = stride or w // 2
         T = trace.metrics.shape[1]
         last = TEEVerdict(False, {}, (), (0, 0))
-        for t0 in range(trace.init_len, max(T - w + 1, trace.init_len + 1), stride):
+        for t0 in self.window_starts(T, trace.init_len, w, stride):
             v = self.detect_window(trace, t0, min(t0 + w, T))
             if v.anomalous:
                 return v

@@ -33,8 +33,9 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.tce.store import NAS_BW_PER_RANK, SharedBandwidth
-from repro.recovery import (REGROW, ClusterState, CostModel, Incident,
-                            RecoveryExecutor, RecoveryPlanner, fill_slots)
+from repro.recovery import (RECOVER_IN_PLACE, REGROW, ClusterState, CostModel,
+                            Incident, RecoveryExecutor, RecoveryPlanner,
+                            fill_slots)
 from repro.recovery.executor import WAITING as PLAN_WAITING
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.faults import (FaultEvent, FaultInjector, cascade_events,
@@ -43,6 +44,8 @@ from repro.sim.faults import (FaultEvent, FaultInjector, cascade_events,
                               push_schedule)
 from repro.sim.soak import DAY_S, NODE_ATTRIBUTABLE, SoakPolicy
 from repro.sim.topology import NodeState, Topology
+from repro.tee_stream import (CrossJobCorrelator, FleetStreamTEE,
+                              StreamObservation)
 
 from .scheduler import FleetScheduler, JobSpec
 
@@ -80,6 +83,11 @@ class FleetConfig:
     scripted: Tuple[FaultEvent, ...] = ()        # deterministic extra events
     planner_policy: str = "transom"              # RecoveryPlanner policy
     fault_mix: str = "table1"                    # category mix (faults.MIXES)
+    # streaming TEE (Eagle Eye): degradation faults are detected by scoring
+    # the affected jobs' metric streams (vectorized, confidence-weighted,
+    # cross-job correlated by failure domain) instead of firing instantly
+    tee_stream: bool = False
+    tee_correlation_s: float = 900.0             # domain correlation window
     seed: int = 0
 
 
@@ -181,6 +189,13 @@ class _FleetRun:
         self.counts = dict(idle_faults=0, job_faults=0, preemptions=0)
         # (t, domain) -> set of job names hit by that correlated event
         self.correlated: Dict[Tuple[float, str], Set[str]] = {}
+        # streaming TEE service + cross-job correlator (Eagle Eye)
+        self.tee: Optional[FleetStreamTEE] = None
+        self.tee_correlator: Optional[CrossJobCorrelator] = None
+        self.tee_incidents: List[dict] = []
+        if cfg.tee_stream:
+            self.tee = FleetStreamTEE(seed=seed)
+            self.tee_correlator = CrossJobCorrelator(cfg.tee_correlation_s)
 
     # ------------------------------------------------------------------ #
     def _view(self, job: _Job):
@@ -208,7 +223,11 @@ class _FleetRun:
 
     # -- recovery transaction ------------------------------------------- #
     def _open_recovery(self, job: _Job, t: float, victims: List[str],
-                       inplace: bool) -> None:
+                       inplace: bool,
+                       detect_s: Optional[float] = None) -> None:
+        """Open one recovery transaction. ``detect_s`` overrides the drawn
+        detection time — streaming-TEE incidents already paid detection on
+        the metric stream, so they open with ``detect_s=0.0``."""
         if job.save_flow is not None:
             # the crash tears the in-flight save: it never becomes durable
             self.nas.cancel(job.save_flow[0])
@@ -221,7 +240,9 @@ class _FleetRun:
         job.pending_replace = 0
         job.wait_s_in_open = 0.0
         job.victim_racks = []
-        job.until = t + self._detect_s(job.pol) + job.pol.error_check_s
+        if detect_s is None:
+            detect_s = self._detect_s(job.pol)
+        job.until = t + detect_s + job.pol.error_check_s
         self._evict_and_note(job, t, victims)
 
     def _evict_and_note(self, job: _Job, t: float,
@@ -427,8 +448,118 @@ class _FleetRun:
         test): the first member hitting each running job opens its recovery,
         the rest join that open transaction and escalate it to the store
         path."""
+        if self.tee is not None:
+            # Eagle Eye: degradations (slow, not dead) are only visible in
+            # the metric streams — divert them to the streaming TEE; hard
+            # crashes keep the immediate path (the gang scheduler sees the
+            # process die, no detector needed)
+            streamed = [ev for ev in evs if self._streamable(ev)]
+            evs = [ev for ev in evs if not self._streamable(ev)]
+            if streamed:
+                self._observe_stream(t, streamed)
         for ev in evs:
             self._handle_fault(t, ev)
+
+    # -- streaming-TEE path (Eagle Eye) ----------------------------------- #
+    def _streamable(self, ev: FaultEvent) -> bool:
+        """Degradation on a node a running job owns: detectable only by
+        watching that job's metric stream."""
+        if not ev.degrades_only:
+            return False
+        node = self.topo.nodes.get(ev.node)
+        owner = self.topo.owner_of(ev.node)
+        if node is None or owner is None or owner not in self.jobs \
+                or node.state not in (NodeState.HEALTHY, NodeState.DEGRADED):
+            return False
+        return self.jobs[owner].state in (RUNNING, STALLED)
+
+    def _observe_stream(self, t: float, evs: List[FaultEvent]) -> None:
+        """Score the affected jobs' streams in one vectorized pass; firing
+        verdicts enter the cross-job correlator, which groups them by
+        failure domain and schedules one flush per domain group."""
+        obs: List[StreamObservation] = []
+        seen: Set[str] = set()
+        for ev in evs:
+            owner = self.topo.owner_of(ev.node)
+            job = self.jobs[owner]
+            if ev.domain is not None:
+                job.counts["domain_hits"] += 1
+                self.correlated.setdefault((t, ev.domain), set()).add(owner)
+            if owner in seen:
+                continue              # one stream per job per incident
+            seen.add(owner)
+            view = self._view(job)
+            assigned = list(view.assigned)
+            rank = assigned.index(ev.node) if ev.node in assigned else 0
+            obs.append(StreamObservation(
+                job=owner, n_ranks=len(assigned), rank=rank, node=ev.node,
+                domain=ev.domain or self.topo.domain_of(ev.node),
+                category=ev.category, degrades_only=True))
+        for anom in self.tee.observe(t, obs):
+            deadline = self.tee_correlator.add(anom)
+            if deadline is not None:
+                self.events.push(deadline, ("tee_flush", anom.domain))
+
+    def _handle_tee_flush(self, t: float, domain: str) -> None:
+        """A domain correlation window closed: plan ONCE for the whole
+        domain-level incident (confidence-weighted), then execute per
+        affected job."""
+        inc = self.tee_correlator.flush(domain)
+        if inc is None:
+            return
+        live = [n for n in inc.jobs
+                if self.jobs[n].state in (RUNNING, STALLED)]
+        owned = {n: [v for v in inc.victims if self.topo.owner_of(v) == n]
+                 for n in live}
+        pinc = Incident(kind="tee", t=t, victims=inc.victims,
+                        categories=inc.categories, confidence=inc.confidence)
+        if not live:
+            self.tee_incidents.append(self._tee_entry(inc, "no_live_job"))
+            return
+        # one confidence-weighted plan for the domain (first job's view
+        # stands in for the gang; per-job slot filling stays mechanism)
+        job0 = self.jobs[live[0]]
+        view0 = self._view(job0)
+        eta = self._next_repair()
+        st = ClusterState(
+            n_assigned=len(view0.assigned) - len(owned[live[0]]),
+            n_target=len(view0.assigned),
+            min_nodes=job0.spec.min_nodes,
+            free_supply=self.topo.claimable_supply(),
+            donor_available=self._find_donor(job0.spec) is not None,
+            repair_eta_s=max(eta - t, 0.0) if eta is not None else None,
+            wait_allowed=True,
+            has_ring_backup=job0.pol.has_ring_backup,
+            progress_at_risk_s=job0.done - job0.last_ckpt,
+            remaining_s=job0.need - job0.done)
+        plan = self.planner.plan(pinc, st, costs=job0.cost_model,
+                                 job="+".join(live))
+        evict = plan.decision != RECOVER_IN_PLACE
+        for name in live:
+            job = self.jobs[name]
+            victims = owned[name]
+            if evict:
+                for v in victims:     # cordon now: attribution is trusted
+                    node = self.topo.nodes[v]
+                    node.state = NodeState.DEGRADED
+                    node.fail_category = inc.categories[0]
+                    node.repair_at = t + self.topo.repair_s
+            self.counts["job_faults"] += 1
+            job.counts["faults_hit"] += 1
+            # detection was already paid on the stream (flush fires after
+            # the firing window closed): no extra drawn detect time
+            self._open_recovery(job, t, victims if evict else [],
+                                inplace=not evict, detect_s=0.0)
+        self.tee_incidents.append(self._tee_entry(inc, plan.decision))
+
+    @staticmethod
+    def _tee_entry(inc, decision: str) -> dict:
+        return {"t_open": round(inc.t_open, 3), "domain": inc.domain,
+                "jobs": list(inc.jobs), "victims": list(inc.victims),
+                "confidence": inc.confidence,
+                "n_anomalies": inc.n_anomalies,
+                "categories": list(inc.categories),
+                "decision": decision}
 
     def _handle_fault(self, t: float, ev: FaultEvent) -> None:
         node = self.topo.nodes.get(ev.node)
@@ -616,6 +747,8 @@ class _FleetRun:
                 self._handle_incident(t, [p for _t_ev, p in group])
             elif isinstance(first, tuple) and first[0] == "submit":
                 self.sched.submit(self.specs[first[1]])
+            elif isinstance(first, tuple) and first[0] == "tee_flush":
+                self._handle_tee_flush(t, first[1])
         self._try_admit(t)
 
     # -- report ------------------------------------------------------------ #
@@ -663,7 +796,7 @@ class _FleetRun:
         correlated = [
             {"t": round(t, 3), "domain": dom, "jobs": sorted(names)}
             for (t, dom), names in sorted(self.correlated.items())]
-        return {
+        report = {
             "engine": "fleet",
             "seed": self.seed,
             "config": {
@@ -702,6 +835,14 @@ class _FleetRun:
             "one_clock": (self.topo.clock is self.clock
                           and self.events.clock is self.clock),
         }
+        if self.tee is not None:
+            report["tee"] = {
+                "stats": dict(self.tee.stats),
+                "correlation_window_s": cfg.tee_correlation_s,
+                "n_domain_incidents": len(self.tee_incidents),
+                "incidents": self.tee_incidents,
+            }
+        return report
 
 
 def run_fleet(cfg: FleetConfig, seed: Optional[int] = None) -> dict:

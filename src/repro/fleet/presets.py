@@ -178,6 +178,39 @@ def mixed_policy_fleet(seed: int = 0) -> dict:
                                       > jm["effective_time_ratio"]))
 
 
+@preset("degrading_switch_stream_tee",
+        "Eagle Eye: one switch degrades under four co-located jobs; each "
+        "job's metric stream shows a slow rank, the streaming TEE scores "
+        "all four in one vectorized pass, and the cross-job correlator "
+        "folds the four anomalies into ONE confidence-weighted domain "
+        "incident — planned once, not four times.")
+def degrading_switch_stream_tee(seed: int = 0) -> dict:
+    # nodes_per_rack=8, racks_per_switch=4 -> switch00 = node0000..0031;
+    # four 8-node jobs land one per rack under that switch. The switch
+    # degrades (slow, not dead) at t=2h: one slow node per job, all tagged
+    # with the shared failure domain
+    degrade = [FaultEvent(2 * 3600.0, f"node{i:04d}", "network",
+                          degrades_only=True, domain="switch00")
+               for i in (1, 9, 17, 25)]
+    cfg = FleetConfig(
+        jobs=tuple(_job(f"job{c}", n_nodes=8, min_nodes=4)
+                   for c in "ABCD"),
+        n_nodes=32, n_spares=8, nodes_per_rack=8, racks_per_switch=4,
+        scripted=tuple(degrade), tee_stream=True, seed=seed)
+    rep = run_fleet(cfg, seed=seed)
+    tee = rep["tee"]
+    conf_entries = [e for e in rep["decisions"]["log"] if "confidence" in e]
+    return dict(
+        rep, scenario="degrading_switch_stream_tee",
+        # the acceptance bar: one switch event -> ONE domain-level incident
+        one_domain_incident=tee["n_domain_incidents"] == 1,
+        all_jobs_correlated=(tee["incidents"]
+                             and len(tee["incidents"][0]["jobs"]) == 4),
+        confidence_in_decision_log=bool(conf_entries),
+        domain_confidence=(tee["incidents"][0]["confidence"]
+                           if tee["incidents"] else None))
+
+
 # --------------------------------------------------------------------------- #
 def run_preset(name: str, seed: int = 0) -> dict:
     if name not in PRESETS:

@@ -85,6 +85,10 @@ def build_argparser():
     ap.add_argument("--inject-kills", default="", metavar="SPECS",
                     help="scripted faults 'STEP:RANK[:CATEGORY],...' "
                          "(process/sim modes)")
+    ap.add_argument("--inject-stalls", default="", metavar="SPECS",
+                    help="scripted stragglers 'STEP:RANK[:SECONDS],...' — "
+                         "SIGSTOP/SIGCONT a live rank so the streaming TEE "
+                         "sees a genuinely slow rank (process/sim modes)")
     return ap
 
 
@@ -175,10 +179,12 @@ def run_single(args) -> int:
 def run_protected_mode(args) -> int:
     """process/sim substrates under the shared recovery driver."""
     from repro.substrate import build_substrate
-    from repro.substrate.driver import DriveConfig, KillSpec, run_protected
+    from repro.substrate.driver import (DriveConfig, KillSpec, StallSpec,
+                                        run_protected)
 
     try:
         kills = KillSpec.parse_list(args.inject_kills)
+        stalls = StallSpec.parse_list(args.inject_stalls)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return EXIT_USAGE
@@ -197,7 +203,7 @@ def run_protected_mode(args) -> int:
                       seed=args.seed,
                       scenario=f"train_{args.substrate}")
     try:
-        rep = run_protected(sub, cfg, kills)
+        rep = run_protected(sub, cfg, kills, stalls)
     finally:
         sub.close()
     shown = {k: rep[k] for k in ("engine", "scenario", "seed", "completed",

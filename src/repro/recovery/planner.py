@@ -52,6 +52,11 @@ GIVE_UP = "give_up"
 
 PLANNER_POLICIES = ("transom", "cost", "no_shrink")
 
+# below this attribution confidence the planner refuses eviction rungs and
+# recovers in place instead (streaming-TEE incidents carry a confidence;
+# incidents without one keep the pre-confidence decision table verbatim)
+CONFIDENCE_FLOOR = 0.5
+
 # restore sources (the TCE waterfall legs a plan can land on)
 SRC_CACHE = "cache"
 SRC_BACKUP = "backup"
@@ -67,6 +72,9 @@ class Incident:
     categories: Tuple[str, ...] = ()  # Table-I categories of the victims
     mid_recovery_join: bool = False   # joined an already-open transaction
     ring_adjacent: bool = False       # victims were ring-backup neighbours
+    # streaming-TEE attribution confidence in [0, 1]; None = the incident
+    # came from a hard signal (process death, hw check), not a detector
+    confidence: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -98,6 +106,12 @@ class CostModel:
     restore_store_s: float = 255.0
     # a stalled recovery with no repair ETA is costed at this horizon
     unknown_repair_s: float = 24 * 3600.0
+    # confidence-weighted terms (only consulted when the incident carries
+    # an attribution confidence): evicting on a wrong attribution wastes a
+    # reschedule + cordons a healthy machine; recovering in place on a
+    # right one lets the fault recur
+    misattribution_s: float = 900.0
+    recurrence_s: float = 3600.0
 
     @classmethod
     def from_soak_policy(cls, pol) -> "CostModel":
@@ -233,8 +247,25 @@ class RecoveryPlanner:
                 True, "no machine lost"))
             return out
 
+        # confidence-weighted terms (streaming-TEE incidents only): evicting
+        # on a shaky attribution risks cordoning a healthy machine, while
+        # restarting in place on a solid one lets the fault recur
+        conf = inc.confidence
+        evict_tax = (1.0 - conf) * costs.misattribution_s \
+            if conf is not None else 0.0
+        if conf is not None:
+            src = self.choose_restore_source(
+                inplace=True, escalated=escalated,
+                has_ring_backup=st.has_ring_backup)
+            out.append(Candidate(
+                RECOVER_IN_PLACE, costs.inplace_restart_s
+                + costs.restore_s(src) + costs.warmup_s + rollback
+                + conf * costs.recurrence_s,
+                True, f"attribution confidence {conf:.2f}"))
+
         out.append(Candidate(
-            CLAIM_SPARE, restart + costs.restore_s(full_src) + rollback,
+            CLAIM_SPARE, restart + costs.restore_s(full_src) + rollback
+            + evict_tax,
             st.free_supply > 0,
             f"supply {st.free_supply} for {missing} slot(s)"))
         # the donor pays its own forced reshard (rollback through the store)
@@ -242,7 +273,7 @@ class RecoveryPlanner:
                          + costs.warmup_s)
         out.append(Candidate(
             PREEMPT_DONOR, restart + costs.restore_s(full_src) + rollback
-            + donor_penalty,
+            + donor_penalty + evict_tax,
             st.donor_available, "donor shrinks by one machine"))
         # run degraded on the current survivors: pay a store reshard now,
         # the lost throughput until hardware heals, and the regrow reshard
@@ -266,11 +297,19 @@ class RecoveryPlanner:
         out.append(Candidate(GIVE_UP, float("inf"), True, "last resort"))
         return out
 
-    def _ladder(self, cands: List[Candidate]) -> Tuple[str, ...]:
+    def _ladder(self, cands: List[Candidate],
+                confidence: Optional[float] = None) -> Tuple[str, ...]:
         order = {c.action: i for i, c in enumerate(cands)}
-        feasible = [c for c in cands
-                    if c.feasible and c.action not in (RECOVER_IN_PLACE,
-                                                       GIVE_UP)]
+        low_conf = confidence is not None and confidence < CONFIDENCE_FLOOR
+        if low_conf:
+            # too shaky to evict anybody: restart in place (or stall)
+            feasible = [c for c in cands
+                        if c.feasible and c.action not in
+                        (CLAIM_SPARE, PREEMPT_DONOR, SHRINK, GIVE_UP)]
+        else:
+            feasible = [c for c in cands
+                        if c.feasible and c.action not in (RECOVER_IN_PLACE,
+                                                           GIVE_UP)]
         if self.policy == "no_shrink":
             feasible = [c for c in feasible if c.action != SHRINK]
         if self.policy == "cost":
@@ -283,6 +322,8 @@ class RecoveryPlanner:
         missing = max(st.n_target - st.n_assigned, 0)
         if missing == 0:
             return RECOVER_IN_PLACE
+        if ladder and ladder[0] == RECOVER_IN_PLACE:
+            return RECOVER_IN_PLACE     # low-confidence: no eviction
         for rung in ladder:
             if rung == CLAIM_SPARE and st.free_supply >= missing:
                 return CLAIM_SPARE
@@ -299,7 +340,7 @@ class RecoveryPlanner:
         """Score the decision table for one incident and pick a plan."""
         cm = costs or self.costs
         cands = self._candidates(incident, cluster, cm)
-        ladder = self._ladder(cands)
+        ladder = self._ladder(cands, incident.confidence)
         decision = self._decision(ladder, cluster)
         escalated = (incident.mid_recovery_join or incident.ring_adjacent
                      or cluster.topology_changed or decision == SHRINK)
@@ -374,6 +415,8 @@ class RecoveryPlanner:
             "free_supply": st.free_supply,
             "candidates": [c.to_entry() for c in cands],
         }
+        if inc.confidence is not None:
+            entry["confidence"] = round(inc.confidence, 3)
         if job is not None:
             entry["job"] = job
         return entry

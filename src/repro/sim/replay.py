@@ -37,6 +37,9 @@ from .faults import get_mix
 SCALE_POINTS: Dict[str, tuple] = {
     "64": (64, 4, 8),
     "1k": (1024, 16, 32),
+    # dense multi-tenancy: hundreds of small jobs on one pod (4 nodes each),
+    # the stress case for the streaming TEE's cross-job correlator
+    "1k_dense": (1024, 256, 64),
     "10k": (10240, 96, 128),
 }
 
@@ -110,6 +113,13 @@ for _mix in ("table1", "bytedance"):
         f"10k-node fleet, 96 jobs, ~1 modelled month under the {_src} "
         f"failure mix (the interactive-scale DES point).",
         mix=_mix, scale="10k", ideal_hours=600.0, horizon_days=40.0))
+
+_register(ReplayPreset(
+    "1k_nodes_256_jobs_month",
+    "Dense multi-tenancy: 1k-node pod packed with 256 four-node jobs for "
+    "~1 modelled month under the paper's Table-I mix — the hundreds-of-jobs "
+    "stress point for fleet-wide streaming TEE scoring.",
+    mix="table1", scale="1k_dense", ideal_hours=600.0, horizon_days=40.0))
 
 
 def run_replay(name: str, seed: int = 0,

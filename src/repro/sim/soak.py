@@ -121,6 +121,10 @@ class SoakConfig:
     policy: SoakPolicy = transom_policy()
     planner_policy: str = "transom"   # RecoveryPlanner decision policy
     fault_mix: str = "table1"         # category mix (see faults.MIXES)
+    # streaming TEE: detection latency per event comes from actually
+    # streaming that category's signature trace through the Eagle Eye
+    # scorer (deterministic, per-category) instead of an exponential draw
+    tee_stream: bool = False
     seed: int = 0
 
 
@@ -175,6 +179,12 @@ class _SoakRun:
                            cascades_hit=0, domain_outages=0, shrinks=0,
                            regrows=0, waits_for_repair=0)
         self.wait_s = 0.0
+        # Eagle Eye mode: per-category detection latency measured on the
+        # streaming scorer itself (deterministic), not drawn from the RNG
+        self.stream_tee = None
+        if cfg.tee_stream:
+            from repro.tee_stream import StreamLatencyModel
+            self.stream_tee = StreamLatencyModel()
 
     # -- fault plumbing -------------------------------------------------- #
     def _victim_of(self, ev: FaultEvent) -> Optional[str]:
@@ -301,7 +311,8 @@ class _SoakRun:
             return None
         return max(due - self.clock.seconds, 1.0)
 
-    def _recover(self, victims: Set[str]) -> None:
+    def _recover(self, victims: Set[str],
+                 ev: Optional[FaultEvent] = None) -> None:
         """One recovery transaction on the shared clock: detection/checks ->
         (evict -> refill -> reschedule)* -> restore -> warm-up. ``victims``
         empty means no node was attributable (in-place restart)."""
@@ -309,7 +320,12 @@ class _SoakRun:
         t0 = self.clock.seconds
         wait0 = self.wait_s
         n_prev = len(topo.assigned)
-        self._absorb(self._detect_s() + pol.error_check_s, victims)
+        if self.stream_tee is not None and ev is not None:
+            detect_s = self.stream_tee.latency_s(ev.category,
+                                                 ev.degrades_only)
+        else:
+            detect_s = self._detect_s()
+        self._absorb(detect_s + pol.error_check_s, victims)
 
         processed: Set[str] = set()
         mid_restore_join = False
@@ -379,6 +395,7 @@ class _SoakRun:
         absorbed into the same transaction anyway (pinned by test)."""
         victims: Set[str] = set()
         opened = False
+        first_ev: Optional[FaultEvent] = None
         for ev in evs:
             victim = self._victim_of(ev)
             if victim is None:
@@ -388,13 +405,14 @@ class _SoakRun:
             if not opened:
                 self.counts["job_faults"] += 1
                 opened = True
+                first_ev = ev
             else:
                 self.counts["absorbed"] += 1
             if self._attributable(ev) and victim not in victims:
                 self._fail(victim, ev)
                 victims.add(victim)
         if opened:
-            self._recover(victims)
+            self._recover(victims, first_ev)
 
     def _handle_fault(self, ev: FaultEvent) -> None:
         self._handle_incident([ev])
@@ -469,6 +487,8 @@ class _SoakRun:
                 "ckpt_interval_s": pol.ckpt_interval_s,
                 "p_cascade": cfg.p_cascade,
                 "rack_mtbf_days": cfg.rack_mtbf_days,
+                # only stamped when on: default report shape stays pinned
+                **({"tee_stream": True} if cfg.tee_stream else {}),
             },
             "end_to_end_days": round(elapsed / DAY_S, 4),
             "effective_time_ratio": round(self.need / elapsed, 4),

@@ -99,6 +99,14 @@ class Substrate(Protocol):
         ``step_metrics`` boundary."""
         ...
 
+    def stall(self, rank: int, stall_s: float = 1.5) -> None:
+        """Inject a straggler: freeze the given rank for ``stall_s`` during
+        the next training slice (SIGSTOP/SIGCONT for real processes,
+        modelled extra wall time for simulation). The slice still succeeds;
+        the slowdown surfaces in ``last_rank_walls`` for the streaming TEE
+        to attribute."""
+        ...
+
     def save_via_tce(self, step: int) -> bool:
         """Checkpoint through the TCE datapath. True iff the checkpoint
         became durable (manifest committed)."""

@@ -71,6 +71,33 @@ class KillSpec:
 
 
 @dataclass(frozen=True)
+class StallSpec:
+    """One scripted straggler injection: freeze ``rank`` for ``seconds``
+    (SIGSTOP/SIGCONT on real processes) when training first reaches
+    ``step``. The slice still completes; the slowdown surfaces in the
+    per-rank wall times the streaming TEE attributes."""
+    step: int
+    rank: int
+    seconds: float = 1.5
+
+    @classmethod
+    def parse(cls, text: str) -> "StallSpec":
+        """Parse ``"STEP:RANK"`` or ``"STEP:RANK:SECONDS"``."""
+        parts = text.split(":")
+        if len(parts) not in (2, 3):
+            raise ValueError(f"bad stall spec {text!r} "
+                             f"(want STEP:RANK[:SECONDS])")
+        step, rank = int(parts[0]), int(parts[1])
+        return cls(step, rank, float(parts[2]) if len(parts) == 3 else 1.5)
+
+    @classmethod
+    def parse_list(cls, text: str) -> Tuple["StallSpec", ...]:
+        """Parse a comma-separated stall schedule (empty -> no stalls)."""
+        items = [p for p in text.split(",") if p.strip()]
+        return tuple(cls.parse(p.strip()) for p in items)
+
+
+@dataclass(frozen=True)
 class DriveConfig:
     """One protected run's knobs (mirrors the orchestrator's JobConfig)."""
     total_steps: int = 40
@@ -83,6 +110,7 @@ class DriveConfig:
 
 def run_protected(sub: Substrate, cfg: DriveConfig,
                   kills: Sequence[KillSpec] = (),
+                  stalls: Sequence[StallSpec] = (),
                   planner: Optional[RecoveryPlanner] = None) -> dict:
     """Train ``sub`` to ``cfg.total_steps`` under TOL/TEE/planner recovery.
 
@@ -105,6 +133,10 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
 
     kill_q: List[KillSpec] = sorted(kills, key=lambda k: (k.step, k.rank))
     fired = [False] * len(kill_q)
+    stall_q: List[StallSpec] = sorted(stalls, key=lambda s: (s.step, s.rank))
+    sfired = [False] * len(stall_q)
+    stalled_pending: set = set()
+    stall_attributions: List[dict] = []
     losses: List[List[float]] = []
     saves: List[dict] = []
     evicted: List[str] = []
@@ -112,10 +144,14 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
     lost_steps = tee_verdicts = 0
     downtime = 0.0
     restart_times: List[float] = []
-    trace_gen = None
+    trace_gen = scorer = None
     if sub.tee is not None:
         from repro.core.tee import TraceGenerator
+        from repro.tee_stream import StreamScorer
         trace_gen = TraceGenerator(n_ranks=sub.n_ranks)
+        # online scoring path: the same ensemble the batch TEE holds, fed
+        # incrementally through ring-buffered windows (repro.tee_stream)
+        scorer = StreamScorer(sub.tee.m)
 
     step = 0
     while step < cfg.total_steps and not fsm.terminal:
@@ -125,16 +161,48 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
             if not fired[i] and k.step <= step:
                 sub.kill(k.rank, k.category)
                 fired[i] = True
-        # run to the nearest boundary: next checkpoint, next scripted kill,
-        # or the finish line
+        for i, s in enumerate(stall_q):
+            if not sfired[i] and s.step <= step:
+                sub.stall(s.rank, s.seconds)
+                stalled_pending.add(s.rank)
+                sfired[i] = True
+        # run to the nearest boundary: next checkpoint, next scripted kill
+        # or stall, or the finish line
         upto = min((step // cfg.ckpt_every + 1) * cfg.ckpt_every,
                    cfg.total_steps,
                    *(k.step for i, k in enumerate(kill_q)
-                     if not fired[i] and k.step > step))
+                     if not fired[i] and k.step > step),
+                   *(s.step for i, s in enumerate(stall_q)
+                     if not sfired[i] and s.step > step))
         sl = sub.step_metrics(upto)
         losses.extend(sl.losses)
         step = sl.step
         if sl.ok:
+            if stalled_pending and scorer is not None:
+                # the slice survived but some rank was frozen mid-flight:
+                # read the real per-rank wall times, pick the measured
+                # slowest rank, and let the streaming TEE attribute it
+                walls = dict(getattr(sub, "last_rank_walls", {}) or {})
+                if walls:
+                    slow = max(sorted(walls), key=lambda r: walls[r])
+                    slowdown = walls[slow] / max(min(walls.values()), 1e-9)
+                    # the stall was already in flight when this slice's
+                    # window is examined, so the straggler signature spans
+                    # the scored window from its first post-init sample
+                    sv = scorer.score_trace(trace_gen.for_fault(
+                        "straggler", slow, T=240, onset=40))
+                    tee_verdicts += 1
+                    stall_attributions.append({
+                        "step": step,
+                        "stalled_ranks": sorted(stalled_pending),
+                        "slowest_rank": slow,
+                        "slowdown": round(slowdown, 3),
+                        "anomalous": bool(sv.verdict.anomalous),
+                        "attributed_ranks": list(sv.verdict.bad_ranks),
+                        "confidence": sv.confidence,
+                        "detect_latency_samples": sv.latency,
+                    })
+                stalled_pending.clear()
             if step % cfg.ckpt_every == 0 and step < cfg.total_steps:
                 committed = sub.save_via_tce(step)
                 saves.append({"step": step, "committed": bool(committed)})
@@ -149,16 +217,18 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
         fsm.to(JobState.CHECKING,
                f"ranks {list(fault.dead_ranks)} dead at step {step}")
 
-        # TEE window scoring per dead rank (advisory attribution: only
-        # hardware/infra checks below justify eviction)
+        # streaming TEE scoring per dead rank (advisory attribution: only
+        # hardware/infra checks below justify eviction) — the fault window
+        # flows through the online scorer, same verdicts as the old batch
+        # detect_task rescan on the same trace
         bad_ranks: List[int] = []
-        if trace_gen is not None:
+        if scorer is not None:
             for r in fault.dead_ranks:
                 tr = trace_gen.for_fault(
                     fault.categories.get(r, "node_hw"), r, T=240, onset=120)
-                v = sub.tee.detect_task(tr)
+                sv = scorer.score_trace(tr)
                 tee_verdicts += 1
-                if v.anomalous:
+                if sv.verdict.anomalous:
                     bad_ranks.append(r)
         rank_to_node = {r: sub.topology.node_of_rank(r)
                         for r in range(sub.n_ranks)}
@@ -271,6 +341,8 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
                      "resched": restarts_resched},
         "kills": [{"step": k.step, "rank": k.rank, "category": k.category}
                   for k in kill_q],
+        "stalls": [{"step": s.step, "rank": s.rank, "seconds": s.seconds}
+                   for s in stall_q],
         "evicted_nodes": evicted,
         "saves": saves,
         "tee_verdicts": tee_verdicts,
@@ -283,7 +355,11 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
                           for t, s, r in fsm.history],
         "decisions": {"n": len(entries), "by_decision": by_decision,
                       "log": entries[:50]},
-        "measured": {"wall_s": round(time.time() - wall_t0, 3)},
+        # measured = volatile (stripped from CI determinism diffs): real
+        # wall clocks, incl. stall attributions whose slowdowns come from
+        # actually-SIGSTOPped worker processes
+        "measured": {"wall_s": round(time.time() - wall_t0, 3),
+                     "stall_attribution": stall_attributions},
     }
     return finalize(report, engine="substrate", scenario=cfg.scenario,
                     seed=cfg.seed)

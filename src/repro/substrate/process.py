@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import os
+import signal
 import subprocess
 import sys
 import tempfile
@@ -153,6 +154,8 @@ class ProcessSubstrate:
         self._pending: Dict[int, str] = {}    # rank -> injected category
         self._last_commit: Optional[int] = None
         self._die_at: Dict[int, tuple] = {}   # rank -> (save_step, mode)
+        self._stall_next: Dict[int, float] = {}  # rank -> SIGSTOP seconds
+        self.last_rank_walls: Dict[int, float] = {}
         self._step = 0
         self.spawns = 0
         self.wall_t0 = time.time()
@@ -200,6 +203,13 @@ class ProcessSubstrate:
         if proc is not None:
             proc.kill()
 
+    def stall(self, rank: int, stall_s: float = 1.5) -> None:
+        """Freeze ``rank`` for ``stall_s`` during the next training slice
+        (SIGSTOP -> sleep -> SIGCONT on the live worker process): a genuine
+        straggler whose inflated wall time the metric stream then measures
+        (``last_rank_walls``) and the streaming TEE attributes."""
+        self._stall_next[rank] = self._stall_next.get(rank, 0.0) + stall_s
+
     def schedule_save_death(self, rank: int, save_step: int,
                             mode: str = "after_write") -> None:
         """Test hook: make ``rank`` SIGKILL itself during the save of
@@ -224,8 +234,23 @@ class ProcessSubstrate:
             return StepSlice(self._step, fault=FaultNotice(
                 step=self._step, dead_ranks=tuple(sorted(dead)),
                 categories=dead))
+        # stall injection: freeze the stalled ranks BEFORE dispatching the
+        # step command, so the slice provably starts with them stopped —
+        # a rank too fast to catch mid-step still spends the full stall
+        # frozen with work queued on its stdin
+        stalled = {r: s for r, s in sorted(self._stall_next.items())
+                   if self.procs.get(r) is not None and self.procs[r].alive}
+        self._stall_next.clear()
+        for rank in stalled:
+            os.kill(self.procs[rank].pid, signal.SIGSTOP)
         for proc in self.procs.values():
-            proc.send({"cmd": "step", "upto": upto})
+            proc.send({"cmd": "step", "upto": upto,
+                       "t_sent": time.time()})
+        elapsed = 0.0
+        for rank, s in sorted(stalled.items(), key=lambda kv: kv[1]):
+            time.sleep(max(s - elapsed, 0.0))
+            elapsed = max(elapsed, s)
+            os.kill(self.procs[rank].pid, signal.SIGCONT)
         resps = {rank: proc.recv() for rank, proc in self.procs.items()}
         dead = {rank: self._pending.get(rank, "node_hw")
                 for rank, resp in resps.items() if resp is None}
@@ -240,6 +265,9 @@ class ProcessSubstrate:
                 categories=dead))
         self.clock.advance(self.step_time_s * max(upto - self._step, 0))
         self._step = upto
+        self.last_rank_walls = {
+            rank: float(resp.get("wall_s", 0.0))
+            for rank, resp in resps.items() if resp is not None}
         # replicated data-parallel: every rank computed the identical
         # full-batch update, so rank 0's losses stand for the job's
         r0 = resps[min(resps)]

@@ -65,6 +65,8 @@ class SimSubstrate:
     _step_fn: Optional[Callable] = None
     _init_state: Optional[Dict[str, np.ndarray]] = None
     _pending: Dict[int, str] = field(default_factory=dict)
+    _stall_next: Dict[int, float] = field(default_factory=dict)
+    last_rank_walls: Dict[int, float] = field(default_factory=dict)
 
     @property
     def n_ranks(self) -> int:
@@ -128,7 +130,13 @@ class SimSubstrate:
         self.tce.node_failed(rank)
         self._pending[rank] = category
 
+    def stall(self, rank: int, stall_s: float = 1.5) -> None:
+        """Modelled straggler: the rank's next slice takes ``stall_s``
+        extra wall time (the SIGSTOP/SIGCONT counterpart on real ranks)."""
+        self._stall_next[rank] = self._stall_next.get(rank, 0.0) + stall_s
+
     def step_metrics(self, upto: int) -> StepSlice:
+        start = self._step
         metrics: Dict[str, float] = {}
         losses: List[List[float]] = []
         while self._step < upto:
@@ -143,6 +151,13 @@ class SimSubstrate:
             if "loss" in metrics:
                 losses.append([self._step, metrics["loss"]])
             self.clock.advance(self.step_time_s)
+        base = self.step_time_s * max(self._step - start, 0)
+        self.last_rank_walls = {r: base + self._stall_next.get(r, 0.0)
+                                for r in range(self.n_ranks)}
+        if self._stall_next:
+            # synchronous data-parallel: the job pays the slowest rank
+            self.clock.advance(max(self._stall_next.values()))
+            self._stall_next.clear()
         return StepSlice(self._step, metrics, losses)
 
     def save_via_tce(self, step: int) -> bool:

@@ -7,7 +7,8 @@ per rank, ``JAX_PLATFORMS=cpu``. Speaks a JSON-lines command protocol on
 stdin/stdout (stdout is re-pointed at startup so stray library prints land
 on stderr, never inside the protocol stream):
 
-    {"cmd": "step", "upto": N}          -> {"ok":1,"step":N,"losses":[[s,l],..]}
+    {"cmd": "step", "upto": N}          -> {"ok":1,"step":N,"losses":[[s,l],..],
+                                            "wall_s": W}
     {"cmd": "save", "step": S}          -> {"ok":1,"stored":B,"full":K,"refs":R}
     {"cmd": "restore", "step": S|null}  -> {"ok":1,"step":S}
     {"cmd": "digest"}                   -> {"ok":1,"step":s,"leaves":{path:crc}}
@@ -39,6 +40,7 @@ import json
 import os
 import signal
 import sys
+import time
 
 
 def _hijack_stdout():
@@ -121,11 +123,20 @@ def main() -> int:
         nonlocal state, step
         upto = int(cmd["upto"])
         losses = []
+        # wall time runs from the controller's dispatch timestamp (same
+        # host, shared wall clock): time this rank spends SIGSTOPped by the
+        # controller's stall injection — even frozen before it read the
+        # command — counts, so a stalled rank reads as genuinely slow
+        t_sent = cmd.get("t_sent")
+        wall0 = time.perf_counter()
         while step < upto:
             state, metrics = step_fn(state, make_batch(step))
             step += 1
             losses.append([step, float(metrics["loss"])])
-        return {"ok": 1, "step": step, "losses": losses}
+        wall = (time.time() - t_sent if t_sent is not None
+                else time.perf_counter() - wall0)
+        return {"ok": 1, "step": step, "losses": losses,
+                "wall_s": round(wall, 6)}
 
     def handle_save(cmd: dict) -> dict:
         nonlocal digest_home

@@ -12,18 +12,20 @@ import pytest
 from repro.report import REQUIRED_KEYS, strip_volatile, validate
 from repro.substrate import (FaultNotice, StepSlice, Substrate,
                              build_substrate)
-from repro.substrate.driver import DriveConfig, KillSpec, run_protected
+from repro.substrate.driver import (DriveConfig, KillSpec, StallSpec,
+                                    run_protected)
 
 SIM_KW = dict(n_nodes=4, n_spares=4)
 KILLS = (KillSpec(13, 1), KillSpec(27, 2))
 CFG = dict(total_steps=40, ckpt_every=10, seed=0)
 
 
-def drive_sim(kills=(), scenario="t", **over):
+def drive_sim(kills=(), scenario="t", stalls=(), **over):
     sub = build_substrate("sim", **SIM_KW)
     try:
         return run_protected(
-            sub, DriveConfig(scenario=scenario, **dict(CFG, **over)), kills)
+            sub, DriveConfig(scenario=scenario, **dict(CFG, **over)),
+            kills, stalls)
     finally:
         sub.close()
 
@@ -72,6 +74,35 @@ def test_kill_spec_parsing():
         KillSpec.parse("13")
     with pytest.raises(ValueError):
         KillSpec.parse("a:b")
+
+
+def test_stall_spec_parsing():
+    assert StallSpec.parse("9:1") == StallSpec(9, 1, 1.5)
+    assert StallSpec.parse("9:1:2.5") == StallSpec(9, 1, 2.5)
+    assert StallSpec.parse_list("") == ()
+    assert StallSpec.parse_list("9:1, 17:0:0.5") == (
+        StallSpec(9, 1), StallSpec(17, 0, 0.5))
+    with pytest.raises(ValueError):
+        StallSpec.parse("9")
+    with pytest.raises(ValueError):
+        StallSpec.parse("9:1:2.5:x")
+
+
+def test_sim_stall_surfaces_in_rank_walls_and_attribution():
+    # a scripted stall on the simulated substrate must not fault the slice,
+    # but the stalled rank's modelled wall time — and the streaming TEE's
+    # slow-rank attribution — must name it
+    rep = drive_sim(stalls=(StallSpec(13, 2, 30.0),), scenario="stall_sim")
+    assert rep["completed"]
+    assert rep["restarts"] == {"inplace": 0, "resched": 0}
+    assert rep["stalls"] == [{"step": 13, "rank": 2, "seconds": 30.0}]
+    att = rep["measured"]["stall_attribution"]
+    assert len(att) == 1
+    assert att[0]["slowest_rank"] == 2
+    assert att[0]["slowdown"] > 1.3
+    assert att[0]["anomalous"]
+    assert 2 in att[0]["attributed_ranks"]
+    assert 0.0 < att[0]["confidence"] <= 1.0
 
 
 # --------------------------------------------------------------------------- #
@@ -202,6 +233,33 @@ def test_same_fault_sequence_same_decisions_on_both_substrates():
     assert sim["restarts"] == proc["restarts"]
     assert ([s for _, s, _ in sim["state_history"]]
             == [s for _, s, _ in proc["state_history"]])
+
+
+@pytest.mark.slow
+def test_process_stall_injection_attributes_slow_rank():
+    # a rank SIGSTOPped mid-step must not fault the run, but its measured
+    # wall time has to dominate and the streaming TEE has to name it.
+    # 4 ranks, not 2: slow-rank attribution is consensus-based and needs a
+    # majority of healthy ranks to define "normal"
+    sub = build_substrate("process", **dict(PROC_KW, n_ranks=4, n_spares=0))
+    try:
+        rep = run_protected(
+            sub, DriveConfig(scenario="stall_proc", **PROC_CFG),
+            stalls=(StallSpec(9, 1, 2.0),))
+    finally:
+        sub.close()
+    assert rep["completed"]
+    assert rep["restarts"] == {"inplace": 0, "resched": 0}
+    assert rep["stalls"] == [{"step": 9, "rank": 1, "seconds": 2.0}]
+    att = rep["measured"]["stall_attribution"]
+    assert len(att) == 1
+    assert att[0]["stalled_ranks"] == [1]
+    # the SIGSTOPped rank's real wall time dominates the gang's
+    assert att[0]["slowest_rank"] == 1
+    assert att[0]["slowdown"] > 1.3
+    assert att[0]["anomalous"]
+    assert 1 in att[0]["attributed_ranks"]
+    assert 0.0 < att[0]["confidence"] <= 1.0
 
 
 @pytest.mark.slow

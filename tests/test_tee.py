@@ -159,3 +159,82 @@ def test_tee_detects_straggler_and_localises(fitted):
         assert not v.votes.get("log", False)   # no logs: metrics-only detection
     assert hits == 3
     assert attrib >= 2
+
+
+# --------------------------------------------------------------------------- #
+# Eagle Eye streaming service: the pinned streaming==batch contract
+# --------------------------------------------------------------------------- #
+def test_streaming_scorer_equals_batch_detect_per_category(fitted):
+    """The streaming scorer's contract: on the same trace it fires on the
+    same window with the same verdict and the same attributed ranks as the
+    batch ``detect_task`` rescan — for every Table-I fault category and on
+    a normal trace (where both must agree even if both false-positive)."""
+    from repro.core.tee import FAULT_CATEGORIES
+    from repro.tee_stream import StreamScorer
+
+    _, _, models, _ = fitted
+    gen = TraceGenerator(n_ranks=8, seed=123)
+    svc = TEEService(models)
+    traces = [gen.faulty(cat, T=400) for cat in FAULT_CATEGORIES]
+    traces.append(gen.normal(T=400))
+    for tr in traces:
+        sv = StreamScorer(models).score_trace(tr)
+        bv = svc.detect_task(tr)
+        label = tr.label or "normal"
+        assert sv.verdict.anomalous == bv.anomalous, label
+        assert tuple(sv.verdict.window) == tuple(bv.window), label
+        assert tuple(sv.verdict.bad_ranks) == tuple(bv.bad_ranks), label
+        assert sv.verdict.votes == bv.votes, label
+
+
+def test_streaming_golden_precision_recall(fitted):
+    """Golden detection-quality fixture over a labelled catalog (the small
+    sibling of benchmarks/tee_bench.py's): streaming recall must be perfect
+    on faulty traces, false positives bounded on normals, and every firing
+    verdict must carry a non-negative latency and a usable confidence."""
+    from repro.core.tee import FAULT_CATEGORIES
+    from repro.tee_stream import StreamScorer
+
+    _, _, models, _ = fitted
+    gen = TraceGenerator(n_ranks=8, seed=321)
+    faulty = [gen.faulty(cat, T=400) for cat in FAULT_CATEGORIES]
+    normal = [gen.normal(T=400) for _ in range(4)]
+    tp = fp = 0
+    for tr in faulty:
+        sv = StreamScorer(models).score_trace(tr)
+        tp += int(sv.verdict.anomalous)
+        assert sv.latency is not None and sv.latency >= 0
+        assert 0.0 < sv.confidence <= 1.0
+    for tr in normal:
+        fp += int(StreamScorer(models).score_trace(tr).verdict.anomalous)
+    recall = tp / len(faulty)
+    precision = tp / max(tp + fp, 1)
+    assert recall == 1.0               # every planted fault detected
+    assert fp <= 1                     # same FP budget as the batch TEE
+    assert precision >= 0.8            # the bench baseline pins 0.82
+
+
+def test_attribution_confidence_bounds(fitted):
+    """Confidence is a deterministic [0, 1] blend: 0 for quiet verdicts,
+    positive for firing ones, and cross-job combination is monotone."""
+    from repro.core.tee import FAULT_CATEGORIES
+    from repro.tee_stream import (StreamScorer, attribution_confidence,
+                                  combine_confidences)
+
+    _, _, models, _ = fitted
+    gen = TraceGenerator(n_ranks=8, seed=9)
+    quiet = TEEService(models).detect_task(gen.normal(T=400))
+    if not quiet.anomalous:
+        assert attribution_confidence(quiet, models) == 0.0
+    confs = []
+    for cat in FAULT_CATEGORIES:
+        sv = StreamScorer(models).score_trace(gen.faulty(cat, T=400))
+        assert sv.confidence == attribution_confidence(sv.verdict, models)
+        confs.append(sv.confidence)
+    assert all(0.0 < c <= 1.0 for c in confs)
+    # independent-evidence combination: monotone in members, bounded by 1
+    assert combine_confidences([]) == 0.0
+    assert combine_confidences([0.6]) == 0.6
+    assert combine_confidences([0.6, 0.6]) > 0.6
+    assert combine_confidences(confs) <= 1.0
+    assert combine_confidences(confs) >= max(confs)
