@@ -138,6 +138,27 @@ def gate_tce(fresh: dict, baseline: dict,
     if stall_ratio > 1.0 + tolerance:
         fails.append(f"new datapath save-stall wall time no longer beats the "
                      f"legacy path: ratio {stall_ratio:.2f} (want <= 1)")
+    # tier hierarchy: the modelled restore-latency win and the prefetch
+    # overlap must not regress against the committed baseline (both are
+    # deterministic modelled-clock numbers, so tolerance covers only
+    # intentional small re-modelling)
+    old_t, new_t = baseline.get("tiers"), fresh.get("tiers")
+    if old_t is not None:
+        if new_t is None:
+            fails.append("tiers section missing from fresh bench")
+        else:
+            old_r = old_t["median_restore_ratio"]
+            new_r = new_t["median_restore_ratio"]
+            if new_r > old_r * (1.0 + tolerance):
+                fails.append(f"tiered restore-latency ratio regressed: "
+                             f"{old_r:.4f} -> {new_r:.4f} "
+                             f"(> {tolerance:.0%} worse)")
+            old_f = old_t["prefetch"]["overlap_frac"]
+            new_f = new_t["prefetch"]["overlap_frac"]
+            if new_f < max(0.5, old_f - tolerance):
+                fails.append(f"prefetch overlap fraction regressed: "
+                             f"{old_f:.3f} -> {new_f:.3f} (want >= 0.5 and "
+                             f"within {tolerance:.0%} of baseline)")
     return fails
 
 

@@ -112,6 +112,16 @@ for f in src/repro/sim/soak.py src/repro/fleet/engine.py \
         || { echo "FAIL: $f no longer routes through the planner" >&2; exit 1; }
 done
 
+echo "== one tier ranking: no engine hardcodes the restore-source order =="
+# restore sources come from RecoveryPlanner.choose_restore_plan /
+# choose_restore_source only; engines must not re-grow literal tier names
+# or their own cache->backup->store conditionals
+if grep -nE '"(cache|backup|store_full|ssd|nas|cold)"[[:space:]]*(if|else)|restore_src[[:space:]]*=[[:space:]]*"|restore_source[[:space:]]*=[[:space:]]*"' \
+        src/repro/sim/soak.py src/repro/fleet/engine.py \
+        src/repro/core/tol/orchestrator.py src/repro/substrate/driver.py; then
+    echo "FAIL: engine file hardcodes a restore tier order" >&2; exit 1
+fi
+
 echo "== bench regression gate: Fig. 6 sweep vs committed baseline =="
 python benchmarks/fig6_e2e.py --quiet --json "$TMP/BENCH_fig6.json"
 python scripts/bench_gate.py "$TMP/BENCH_fig6.json"

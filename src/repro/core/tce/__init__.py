@@ -1,17 +1,24 @@
-from .engine import TCEngine, TCEConfig, SaveHandle
+from .engine import TCEngine, TCEConfig, SaveHandle, PrefetchHandle
 from .cache import CacheServer, EvictionConfig, PutStats
 from .codec import decode_shard, encode_shard, is_lossless_path
 from .fastcopy import METER, CopyMeter, crc32_stream
-from .store import DiskStore, NASStore, SharedBandwidth
+from .store import (ChainIntegrityError, DiskStore, ModeledStore, NASStore,
+                    SharedBandwidth, TieredStore)
 from .model import tce_theory, TheoryParams
 from .sharding import ShardSpec, shard_state, unshard_state, reshard
+# the tier vocabulary lives in repro.recovery.tiers (a dependency-free
+# leaf); re-exported here because the checkpoint hierarchy is TCE-facing
+from repro.recovery.tiers import (Tier, TierTable, default_tiers,
+                                  three_leg_tiers)
 
 __all__ = [
-    "TCEngine", "TCEConfig", "SaveHandle", "CacheServer", "EvictionConfig",
-    "PutStats", "DiskStore", "NASStore", "SharedBandwidth",
+    "TCEngine", "TCEConfig", "SaveHandle", "PrefetchHandle", "CacheServer",
+    "EvictionConfig", "PutStats", "DiskStore", "NASStore", "ModeledStore",
+    "TieredStore", "ChainIntegrityError", "SharedBandwidth",
     "tce_theory", "TheoryParams", "METER", "CopyMeter", "crc32_stream",
     "encode_shard", "decode_shard", "is_lossless_path",
     "ShardSpec", "shard_state", "unshard_state", "reshard",
+    "Tier", "TierTable", "default_tiers", "three_leg_tiers",
 ]
 from .patch import transom_protect, start_step, restore_into  # noqa: E402,F401
 

@@ -33,6 +33,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.recovery.tiers import (TIER_DEVICE, TIER_DRAM, TIER_NAS,
+                                  TIER_PEER, TierTable)
 from repro.sim.clock import SimClock
 from repro.sim.topology import Topology
 
@@ -40,23 +42,41 @@ from .cache import CacheServer, EvictionConfig, PutStats
 from .fastcopy import METER
 from .reconciler import Reconciler
 from .sharding import NodeShards, shard_state, unshard_state
-from .store import DiskStore
+from .store import DiskStore, NAS_BW_PER_RANK
 from .transport import Fabric, MEM_BW, TransportError
 
 
 # --------------------------------------------------------------------------- #
 # Pytree <-> flat dict
 # --------------------------------------------------------------------------- #
+# Path strings per treedef: a training loop flattens the same state shape
+# every save/restore, but tree_flatten_with_path rebuilds every key string
+# each call. Treedefs hash stably, so the (much cheaper) tree_flatten pairs
+# with cached path lists after the first call per shape.
+_TREEDEF_PATHS: Dict[object, List[str]] = {}
+_TREEDEF_PATHS_LOCK = threading.Lock()
+
+
+def _paths_for(tree, treedef) -> List[str]:
+    with _TREEDEF_PATHS_LOCK:
+        paths = _TREEDEF_PATHS.get(treedef)
+    if paths is not None:
+        return paths
+    import jax
+    paths = [("/".join(_key_str(k) for k in kp) or "leaf")
+             for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    with _TREEDEF_PATHS_LOCK:
+        _TREEDEF_PATHS[treedef] = paths
+    return paths
+
+
 def flatten_pytree(tree) -> Dict[str, np.ndarray]:
     """Flatten an arbitrary pytree (incl. jax arrays) to {path: np.ndarray}."""
     import jax
 
-    out: Dict[str, np.ndarray] = {}
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    for kp, leaf in flat:
-        path = "/".join(_key_str(k) for k in kp) or "leaf"
-        out[path] = np.asarray(leaf)
-    return out
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = _paths_for(tree, treedef)
+    return {path: np.asarray(leaf) for path, leaf in zip(paths, leaves)}
 
 
 def _key_str(k) -> str:
@@ -74,9 +94,8 @@ def unflatten_like(tree, flat: Dict[str, np.ndarray]):
     """Inverse of flatten_pytree given a template tree (shapes must match)."""
     import jax
 
-    paths = [("/".join(_key_str(k) for k in kp) or "leaf")
-             for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = _paths_for(tree, treedef)
     new_leaves = []
     for path, leaf in zip(paths, leaves):
         arr = flat[path]
@@ -122,6 +141,38 @@ class TCEConfig:
     # staging, copying cache reads, double reconciler gets, full re-persist
     # every save, tobytes() checksums). fig8_tce measures both.
     legacy_datapath: bool = False
+    # ---- N-tier hierarchy ------------------------------------------------ #
+    # None keeps the classic 3-leg cache→ring-backup→NAS waterfall
+    # byte-identical. A TierTable additionally enables the device-tier
+    # snapshot (zero-copy reference to the last saved state, wiped on node
+    # failure), tier-constrained restores (the planner's
+    # ``choose_restore_plan`` tiers gate each waterfall leg) and, with a
+    # TieredStore, capacity-driven demotion down the durable legs.
+    tier_table: Optional[TierTable] = None
+
+
+class PrefetchHandle:
+    """One speculative restore stream started ahead of the actual restore.
+
+    The handle carries the shards already read (real bytes, so the later
+    restore is bit-exact) plus the modelled stream window ``[t0, t0 +
+    duration_s]``. When the restore consumes the handle it charges only the
+    *residual* — the part of the stream that had not finished while TOL was
+    still electing/warming replacements — which is the whole point: restore
+    bytes overlap election instead of following it."""
+
+    def __init__(self, step: int, tier: str, t0: float, duration_s: float,
+                 nbytes: int, ranks: List[NodeShards]):
+        self.step = step
+        self.tier = tier
+        self.t0 = t0
+        self.duration_s = duration_s
+        self.nbytes = nbytes
+        self.ranks = ranks
+        self.used = False
+
+    def residual_s(self, now: float) -> float:
+        return max(0.0, self.t0 + self.duration_s - now)
 
 
 class SaveHandle:
@@ -185,6 +236,11 @@ class TCEngine:
         self.stats = {"saves": 0, "restores": 0, "fetch_requests": 0,
                       "fetch_transfers": 0, "restore_sources": {}}
         self._lock = threading.Lock()
+        self.tiers = cfg.tier_table
+        # device-tier snapshot: (step, flat state) kept by reference — the
+        # HBM copy of the state that was just checkpointed. Zero cost to
+        # keep, gone the instant a node is.
+        self._device: Optional[Tuple[int, Dict[str, np.ndarray]]] = None
 
     # ------------------------------------------------------------------ #
     def close(self) -> None:
@@ -228,6 +284,8 @@ class TCEngine:
         handle.modeled_cache_s = max(p.bytes_staged for p in puts) \
             / self.cfg.mem_bw
         self.clock.advance(handle.modeled_cache_s)
+        if self.tiers is not None and TIER_DEVICE in self.tiers:
+            self._device = (step, flat)
         with self._lock:
             self.stats["saves"] += 1
         if not self.cfg.async_persist:
@@ -270,7 +328,8 @@ class TCEngine:
         return shards
 
     def restore(self, step: Optional[int] = None,
-                consumers_per_node: int = 1
+                consumers_per_node: int = 1, *,
+                plan=None, prefetch: Optional[PrefetchHandle] = None
                 ) -> Tuple[int, Dict[str, np.ndarray]]:
         """Waterfall restore. Returns (step, flat state dict).
 
@@ -283,38 +342,73 @@ class TCEngine:
         (max per-node bytes — nodes read in parallel), fabric and NAS
         transfers charge through their own bandwidth models.
 
+        ``plan`` (a planner :class:`~repro.recovery.planner.RestorePlan` or
+        an iterable of tier names) constrains which hierarchy legs this
+        restore may touch: device snapshot / local cache ("dram") / ring
+        backup ("peer") / the durable store legs. ``prefetch`` consumes a
+        speculative stream from :meth:`prefetch_restore` — store-leg bytes
+        already streamed while TOL was electing charge only their residual.
+
         The returned state is the *global* (unsharded) state: a checkpoint
         written on N nodes restores through the ``store_full`` path onto an
         engine with M != N nodes, and the caller re-shards by saving through
         the new engine (elastic shrink/grow).
         """
+        allowed = None
+        if plan is not None:
+            allowed = frozenset(getattr(plan, "tiers", plan))
+        tiered_store = getattr(self.store, "tiered", False)
+        store_kw = {"tiers": allowed} if (tiered_store and allowed) else {}
+        dev = self._device if (
+            self.tiers is not None and self._device is not None
+            and (allowed is None or TIER_DEVICE in allowed)) else None
         if step is None:
             cached = {s for c in self.caches for s in c.steps()}
-            cached.update(self.store.steps())
+            cached.update(self.store.steps(**store_kw))
+            if dev is not None:
+                cached.add(dev[0])
             if not cached:
                 raise FileNotFoundError("no checkpoint available")
             last_err: Optional[Exception] = None
             for cand in sorted(cached, reverse=True):
                 try:
                     return self.restore(step=cand,
-                                        consumers_per_node=consumers_per_node)
+                                        consumers_per_node=consumers_per_node,
+                                        plan=plan, prefetch=prefetch)
                 except FileNotFoundError as e:
                     last_err = e
             raise last_err
+        if dev is not None and dev[0] == step:
+            # hottest tier: the HBM snapshot of the very state that was
+            # checkpointed — a reference copy, charged at device read bw
+            flat = dict(dev[1])
+            total = sum(a.nbytes for a in flat.values())
+            self.clock.advance(self.tiers.get(TIER_DEVICE).read_s(total))
+            with self._lock:
+                self.stats["restores"] += 1
+                self.stats["restore_sources"] = {"device": self.cfg.n_nodes}
+            return step, flat
+        use_cache = allowed is None or TIER_DRAM in allowed
+        use_backup = allowed is None or TIER_PEER in allowed
         memo: Dict[Tuple[int, int], Optional[NodeShards]] = {}
         memo_lock = threading.Lock()
         sources = {"cache": 0, "backup": 0, "store": 0, "store_full": 0}
         try:
-            store_ranks = self.store.manifest(step)["n_ranks"]
+            store_ranks = self.store.manifest(step, **store_kw)["n_ranks"]
         except Exception:
             store_ranks = None
+        pf = prefetch if (prefetch is not None and not prefetch.used
+                          and prefetch.step == step) else None
+        pf_hit = False
 
         def _resolve_mem(rank: int) -> Tuple[Optional[str], Optional[NodeShards]]:
             """Cache/backup waterfall for one rank (store stays serial)."""
-            if not self.fabric.is_down(rank):
+            if use_cache and not self.fabric.is_down(rank):
                 shards = self.caches[rank].get(step)
                 if shards is not None:
                     return "cache", shards
+            if not use_backup:
+                return None, None
             # consumers on the node all want the same remote shards; the
             # fetch is deduplicated through `memo`
             for _ in range(max(consumers_per_node - 1, 0)):
@@ -333,14 +427,22 @@ class TCEngine:
                 if store_ranks == self.cfg.n_nodes:
                     # NAS reads are serial: the store is the modelled shared
                     # bottleneck (and SharedBandwidth charging is not
-                    # reentrant)
-                    shards = self.store.read_rank(step, rank)
+                    # reentrant). A live prefetch already holds these bytes.
+                    if pf is not None and len(pf.ranks) == store_ranks:
+                        shards = pf.ranks[rank]
+                        pf_hit = True
+                    else:
+                        shards = self.store.read_rank(step, rank, **store_kw)
                     src = "store"
                 elif store_ranks is not None:
                     # topology changed since this step was written: fall back
                     # to a full store read in the manifest's own rank layout
                     # (elastic reshard path)
-                    per_node = self.store.read_all(step)
+                    if pf is not None and len(pf.ranks) == store_ranks:
+                        per_node = list(pf.ranks)
+                        pf_hit = True
+                    else:
+                        per_node = self.store.read_all(step, **store_kw)
                     sources["store_full"] = 1
                     full_read = True
                     break
@@ -350,6 +452,19 @@ class TCEngine:
                         f"(cache lost, backup lost, not persisted)")
             sources[src] += 1
             per_node.append(shards)
+        if pf_hit:
+            # the speculative stream ran while TOL was electing; charge only
+            # the part that had not finished by now
+            pf.used = True
+            residual = pf.residual_s(self.clock.seconds)
+            self.clock.advance(residual)
+            overlap = pf.duration_s - residual
+            with self._lock:
+                self.stats["prefetch"] = {
+                    "bytes": pf.nbytes, "tier": pf.tier,
+                    "duration_s": pf.duration_s, "overlap_s": overlap,
+                    "overlap_frac": (overlap / pf.duration_s
+                                     if pf.duration_s > 0 else 1.0)}
         if not full_read:
             # local in-memory reads happen in parallel across nodes: charge
             # the max per-node byte count at B_mem on the modelled clock
@@ -366,10 +481,60 @@ class TCEngine:
         return step, state
 
     # ------------------------------------------------------------------ #
+    def prefetch_restore(self, step: Optional[int] = None, *,
+                         plan=None) -> Optional[PrefetchHandle]:
+        """Start a speculative restore stream from the durable store.
+
+        Called the moment a fault is detected — while TOL is still running
+        checks, electing replacements and warming them up — so the
+        store-leg bytes stream *during* the election window instead of
+        after it. Reads the freshest committed step's shards for real (the
+        later restore is bit-exact) but charges nothing to the modelled
+        clock yet: the stream's window is ``[now, now + bytes/bw]`` and
+        :meth:`restore` charges only whatever residual is left when it
+        consumes the handle.
+
+        Returns None when there is nothing durable to prefetch (the
+        restore will resolve from cache/backup anyway).
+        """
+        allowed = None
+        if plan is not None:
+            allowed = frozenset(getattr(plan, "tiers", plan))
+        tiered_store = getattr(self.store, "tiered", False)
+        store_kw = {"tiers": allowed} if (tiered_store and allowed) else {}
+        try:
+            if step is None:
+                step = self.store.latest_step(**store_kw)
+            if step is None:
+                return None
+            if tiered_store:
+                tier, leg = self.store._leg_for(step, allowed)
+            else:
+                tier, leg = TIER_NAS, self.store
+            m = leg.manifest(step)
+        except (FileNotFoundError, KeyError):
+            return None
+        ranks: List[NodeShards] = []
+        nbytes = 0
+        for r in range(int(m["n_ranks"])):
+            shards, stored = leg._read_rank_impl(step, r)
+            ranks.append(shards)
+            nbytes += stored
+        if self.tiers is not None and tier in self.tiers:
+            bw = self.tiers.get(tier).read_bw
+        else:
+            bw = getattr(leg, "bw", NAS_BW_PER_RANK)
+        duration = nbytes / bw if bw > 0 else 0.0
+        return PrefetchHandle(step, tier, self.clock.seconds, duration,
+                              nbytes, ranks)
+
+    # ------------------------------------------------------------------ #
     # Failure hooks (driven by TOL)
     # ------------------------------------------------------------------ #
     def node_failed(self, rank: int) -> None:
-        """Node crash: its cache (incl. backups it held) is gone."""
+        """Node crash: its cache (incl. backups it held) is gone — and so
+        is the device-tier snapshot (it lived in the gang's HBM)."""
+        self._device = None
         self.caches[rank].wipe()
         self.fabric.fail_node(rank)
 

@@ -27,9 +27,11 @@ the real wall time so benchmarks can report both.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional
 
@@ -38,6 +40,25 @@ import numpy as np
 DEFAULT_CHUNK = 4 * 1024 * 1024      # k: bounce-buffer size
 DEFAULT_THREADS = 4                  # n
 CRC_CHUNK = 1 << 20                  # streaming-crc window (cache-resident)
+
+# One shared copy pool for every chunked_copy call in the process. The
+# historical implementation spawned (and joined) fresh threading.Thread
+# workers per call — thread creation dominated small steady-state saves.
+# Copy workers never submit further work, so sharing one executor across
+# concurrent engine save/restore calls cannot deadlock; calls just queue.
+_COPY_POOL: Optional[ThreadPoolExecutor] = None
+_COPY_POOL_LOCK = threading.Lock()
+
+
+def _copy_pool() -> ThreadPoolExecutor:
+    global _COPY_POOL
+    if _COPY_POOL is None:
+        with _COPY_POOL_LOCK:
+            if _COPY_POOL is None:
+                _COPY_POOL = ThreadPoolExecutor(
+                    max_workers=max(os.cpu_count() or 4, DEFAULT_THREADS),
+                    thread_name_prefix="copy")
+    return _COPY_POOL
 
 
 class CopyMeter:
@@ -142,11 +163,9 @@ def chunked_copy(dst: np.ndarray, src: np.ndarray,
             dst_b[j:j + step] = bounce[:step]
             j += step
 
-    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
+    pool = _copy_pool()
+    for f in [pool.submit(worker, i) for i in range(n_threads)]:
+        f.result()
     METER.add(n * hops)
     return CopyStats(n, time.perf_counter() - t0, n_threads, chunk)
 

@@ -93,7 +93,12 @@ class Reconciler:
         self._stop.set()
         self._kick.set()
         if self._thread is not None:
-            self._thread.join(timeout=10)
+            # a bounded join can return with the loop still mid-pass on a
+            # loaded host — leaving a detached thread writing into a store
+            # directory the caller may be about to delete. reconcile_once
+            # always terminates, so wait for the real exit.
+            while self._thread.is_alive():
+                self._thread.join(timeout=10)
             self._thread = None
 
     def kick(self) -> None:
@@ -178,7 +183,10 @@ class Reconciler:
         if base and digmap:
             for path, digest in digmap.items():
                 prev = base.get(path)
-                if prev is not None and prev[1] == digest:
+                # refs must only point *backwards*: after a rewind-and-replay
+                # a re-persisted step could otherwise ref a later step whose
+                # own chain points back at it (a delta-ref cycle on disk)
+                if prev is not None and prev[1] == digest and prev[0] < step:
                     refs[path] = prev            # (home_step, digest)
         self.store.write_rank(step, rank, shards, refs=refs, digests=digmap,
                               codec=self.codec,
@@ -326,3 +334,12 @@ class Reconciler:
                     self._committed.add(step)
                     self._last_committed = step
                     self.durable_at[step] = self.clock.seconds
+        # tier-aware aging: a TieredStore demotes steps over a leg's
+        # capacity budget one rung down the hierarchy (idempotent no-op on
+        # plain stores and under-budget legs)
+        demote = getattr(self.store, "demote_due", None)
+        if demote is not None:
+            try:
+                demote()
+            except Exception as e:
+                self.errors.append(f"demote: {e!r}")

@@ -23,8 +23,17 @@ Datapath (this store is the tail of the zero-copy pipeline):
   both the stored-payload crc (corruption detection) and the raw-content
   digest (delta bookkeeping).
 
-``delete_step`` does not resolve inbound refs — deleting a step that later
-delta steps reference breaks them (the sim only deletes whole roots).
+``delete_step`` refuses to delete a step that later delta steps still
+reference (:class:`ChainIntegrityError`); pass ``rematerialize=True`` to
+migrate the referenced payloads into their dependents first, or
+``force=True`` to knowingly strand them.
+
+``TieredStore`` stacks several durable stores into the N-tier checkpoint
+hierarchy (rack SSD burst buffer → NAS → cold object store): writes land on
+the hottest leg, reads resolve from the hottest leg that still holds the
+step, and ``demote_due`` ages steps down the ladder when a leg runs over
+its tier's capacity budget — rematerializing delta chains on the way so
+demotion never strands a dependent.
 """
 from __future__ import annotations
 
@@ -43,6 +52,10 @@ from .fastcopy import METER, crc32_stream
 from .sharding import NodeShards, ShardSpec
 
 NAS_BW_PER_RANK = 71.1e6  # bytes/s — paper §IV-C: "roughly 71.1MB/s per rank"
+
+
+class ChainIntegrityError(RuntimeError):
+    """Deleting this step would strand delta leaves that reference it."""
 
 
 class SharedBandwidth:
@@ -154,7 +167,8 @@ class DiskStore:
         self.root.mkdir(parents=True, exist_ok=True)
         self.legacy_crc = legacy_crc
         self.stats = {"bytes_stored": 0, "bytes_raw": 0, "leaves_written": 0,
-                      "leaves_ref": 0, "bytes_read_stored": 0}
+                      "leaves_ref": 0, "bytes_read_stored": 0,
+                      "leaves_rematerialized": 0}
 
     def namespace(self, job_id: str) -> "DiskStore":
         """A per-job checkpoint namespace inside this shared store root.
@@ -337,8 +351,110 @@ class DiskStore:
         m = self.manifest(step)
         return [self.read_rank(step, r) for r in range(m["n_ranks"])]
 
-    def delete_step(self, step: int) -> None:
+    def has_step(self, step: int) -> bool:
+        """True if the step is committed here (manifest visible)."""
+        return self._manifest(step).exists()
+
+    # -- chain-safe GC --------------------------------------------------- #
+    def chain_dependents(self, step: int) -> List[int]:
+        """Steps whose rank indexes still hold delta refs into ``step``.
+
+        Refs are path-compressed (each points straight at the step whose
+        rank dir holds the bytes), so one scan of every other step's index
+        files finds every inbound edge."""
+        deps = set()
+        for d in self.root.glob("step_*"):
+            try:
+                other = int(d.name.split("_", 1)[1])
+            except (IndexError, ValueError):
+                continue
+            if other == step:
+                continue
+            for idx in d.glob("rank_*/index.json"):
+                try:
+                    index = json.loads(idx.read_text())
+                except Exception:
+                    continue
+                if any(int(e.get("ref_step", -1)) == step for e in index):
+                    deps.add(other)
+                    break
+        return sorted(deps)
+
+    def rematerialize_step(self, step: int) -> int:
+        """Copy ``step``'s payloads into every dependent's rank dir and
+        rewrite their refs as self-contained file entries, so ``step`` can
+        be deleted without stranding the chain. Returns bytes copied."""
+        copied = 0
+        for dep in self.chain_dependents(step):
+            m = self.manifest(dep)
+            for rank in range(int(m["n_ranks"])):
+                rdir = self._rank_dir(dep, rank)
+                try:
+                    index = self.rank_index(dep, rank)
+                except FileNotFoundError:
+                    continue
+                home = {e["spec"]["path"]: e
+                        for e in self.rank_index(step, rank)}
+                changed = False
+                for ent in index:
+                    if int(ent.get("ref_step", -1)) != step:
+                        continue
+                    src = home.get(ent["spec"]["path"])
+                    if src is None:
+                        raise ChainIntegrityError(
+                            f"step {dep} rank {rank} refs "
+                            f"{ent['spec']['path']} missing from step {step}")
+                    if "file" not in src:
+                        # the home entry is itself a (deeper) ref: just
+                        # repoint the dependent one hop further down
+                        ent["ref_step"] = int(src["ref_step"])
+                        changed = True
+                        continue
+                    fname = f"rm{step:08d}_{src['file']}"
+                    payload = np.fromfile(
+                        self._rank_dir(step, rank) / src["file"], np.uint8)
+                    tmp = rdir / (fname + ".tmp")
+                    with open(tmp, "wb") as f:
+                        f.write(memoryview(payload))
+                        f.flush()
+                        os.fsync(f.fileno())
+                    os.replace(tmp, rdir / fname)
+                    METER.add(payload.nbytes)
+                    copied += payload.nbytes
+                    ent.pop("ref_step", None)
+                    ent.update({"file": fname,
+                                "enc": src.get("enc", "raw"),
+                                "meta": src.get("meta"),
+                                "crc32": int(src["crc32"]),
+                                "digest": int(src["digest"]),
+                                "nbytes_stored": int(src["nbytes_stored"])})
+                    self.stats["leaves_rematerialized"] += 1
+                    changed = True
+                if changed:
+                    tmp = rdir / "index.json.tmp"
+                    tmp.write_text(json.dumps(index))
+                    os.replace(tmp, rdir / "index.json")
+        self.stats["bytes_stored"] += copied
+        return copied
+
+    def delete_step(self, step: int, *, rematerialize: bool = False,
+                    force: bool = False) -> None:
+        """Delete one step — refusing, by default, to strand a chain.
+
+        If other steps' delta refs still point into this one, deletion
+        raises :class:`ChainIntegrityError` unless ``rematerialize=True``
+        (migrate the shared payloads into the dependents first) or
+        ``force=True`` (the historical unchecked behaviour)."""
         import shutil
+        if not force:
+            deps = self.chain_dependents(step)
+            if deps:
+                if not rematerialize:
+                    raise ChainIntegrityError(
+                        f"step {step} is still the delta base of "
+                        f"step(s) {deps}; pass rematerialize=True to "
+                        "migrate the chain or force=True to strand it")
+                self.rematerialize_step(step)
         shutil.rmtree(self._step_dir(step), ignore_errors=True)
 
 
@@ -388,3 +504,196 @@ class NASStore(DiskStore):
         out, stored_read = self._read_rank_impl(step, rank, verify)
         self._charge(stored_read, f"restore_r{rank}")
         return out
+
+
+class ModeledStore(NASStore):
+    """One durable leg of the tier hierarchy at an arbitrary modelled
+    bandwidth — NASStore mechanics with a tier name and (optionally)
+    asymmetric read/write bandwidth, for the rack burst-buffer SSD and the
+    cold object store."""
+
+    def __init__(self, root: str, *, tier_name: str = "nas",
+                 bw_read: float = NAS_BW_PER_RANK,
+                 bw_write: Optional[float] = None,
+                 clock: Optional[SimClock] = None,
+                 arbiter: Optional[SharedBandwidth] = None,
+                 legacy_crc: bool = False):
+        super().__init__(root, bw_per_rank=bw_read, clock=clock,
+                         arbiter=arbiter, legacy_crc=legacy_crc)
+        self.tier_name = tier_name
+        self.bw_write = bw_write if bw_write is not None else bw_read
+
+    def _namespace_kwargs(self) -> dict:
+        return {"tier_name": self.tier_name, "bw_read": self.bw,
+                "bw_write": self.bw_write, "clock": self.clock,
+                "arbiter": self.arbiter, "legacy_crc": self.legacy_crc}
+
+    def write_rank(self, step: int, rank: int, shards: NodeShards,
+                   **kw) -> int:
+        nbytes = DiskStore.write_rank(self, step, rank, shards, **kw)
+        if self.arbiter is not None:
+            self.clock.advance(self.arbiter.transfer(
+                self.clock.seconds, nbytes, f"save_r{rank}"))
+        else:
+            self.clock.advance(nbytes / self.bw_write)
+        return nbytes
+
+
+class TieredStore:
+    """Ordered durable legs of the N-tier hierarchy, hottest leg first.
+
+    DiskStore-compatible surface over a ladder like ssd→nas→cold: writes
+    land on the hottest leg; reads resolve from the hottest *up* leg that
+    holds the step (restores can constrain that with a planner tier list);
+    :meth:`demote_due` ages the oldest steps down the ladder whenever a
+    leg runs over its tier's per-rank capacity budget, paying the modelled
+    read+write bandwidth of both legs and rematerializing delta chains so
+    demotion never strands a dependent. ``fail_tier``/``restore_tier``
+    model brownouts and correlated tier loss.
+    """
+
+    tiered = True
+
+    def __init__(self, legs: Dict[str, DiskStore], *, table=None,
+                 clock: Optional[SimClock] = None):
+        if not legs:
+            raise ValueError("TieredStore needs at least one leg")
+        self.legs = dict(legs)               # insertion order = hot -> cold
+        self.order = list(self.legs)
+        self.primary = self.legs[self.order[0]]
+        self.table = table
+        self.clock = clock or getattr(self.primary, "clock", None) \
+            or SimClock()
+        self._down: set = set()
+        self.stats = {"demotions": 0, "demoted_bytes": 0}
+
+    # -- tier availability ----------------------------------------------- #
+    def fail_tier(self, name: str) -> None:
+        self._down.add(name)
+
+    def restore_tier(self, name: str) -> None:
+        self._down.discard(name)
+
+    def _up(self, name: str) -> bool:
+        return name not in self._down
+
+    # -- write path (hottest leg) ---------------------------------------- #
+    def write_rank(self, step: int, rank: int, shards: NodeShards, *,
+                   refs: Optional[Dict[str, Tuple[int, int]]] = None,
+                   **kw) -> int:
+        if refs:
+            # a ref is only valid if its home step still lives on the
+            # primary leg — steps demoted down the ladder are no longer
+            # one hop away, so those leaves are rewritten in full
+            refs = {p: r for p, r in refs.items()
+                    if self.primary.has_step(int(r[0]))}
+        return self.primary.write_rank(step, rank, shards, refs=refs, **kw)
+
+    def commit(self, step: int, n_ranks: int, meta: Optional[dict] = None,
+               delta_base: Optional[int] = None) -> None:
+        if delta_base is not None and not self.primary.has_step(delta_base):
+            delta_base = None
+        self.primary.commit(step, n_ranks, meta, delta_base)
+
+    # -- read path (hottest up leg holding the step) ---------------------- #
+    def _leg_for(self, step: int, tiers=None) -> Tuple[str, DiskStore]:
+        for name in self.order:
+            if not self._up(name) or (tiers is not None
+                                      and name not in tiers):
+                continue
+            if self.legs[name].has_step(step):
+                return name, self.legs[name]
+        raise FileNotFoundError(
+            f"step {step} not on any reachable tier "
+            f"(down: {sorted(self._down)}, allowed: {tiers})")
+
+    def tier_of(self, step: int) -> str:
+        return self._leg_for(step)[0]
+
+    def steps(self, tiers=None) -> List[int]:
+        out = set()
+        for name in self.order:
+            if self._up(name) and (tiers is None or name in tiers):
+                out.update(self.legs[name].steps())
+        return sorted(out)
+
+    def latest_step(self, tiers=None) -> Optional[int]:
+        s = self.steps(tiers)
+        return s[-1] if s else None
+
+    def manifest(self, step: int, tiers=None) -> dict:
+        return self._leg_for(step, tiers)[1].manifest(step)
+
+    def rank_index(self, step: int, rank: int, tiers=None) -> List[dict]:
+        return self._leg_for(step, tiers)[1].rank_index(step, rank)
+
+    def read_rank(self, step: int, rank: int, verify: bool = True,
+                  tiers=None) -> NodeShards:
+        return self._leg_for(step, tiers)[1].read_rank(step, rank, verify)
+
+    def read_all(self, step: int, tiers=None) -> List[NodeShards]:
+        name, leg = self._leg_for(step, tiers)
+        m = leg.manifest(step)
+        return [leg.read_rank(step, r) for r in range(m["n_ranks"])]
+
+    def delete_step(self, step: int, **kw) -> None:
+        for name in self.order:
+            if self.legs[name].has_step(step):
+                self.legs[name].delete_step(step, **kw)
+
+    def has_step(self, step: int) -> bool:
+        return any(self.legs[n].has_step(step) for n in self.order
+                   if self._up(n))
+
+    # -- tier-aware aging -------------------------------------------------- #
+    def _step_stored_bytes(self, leg: DiskStore, step: int) -> int:
+        total = 0
+        m = leg.manifest(step)
+        for r in range(int(m["n_ranks"])):
+            try:
+                index = leg.rank_index(step, r)
+            except FileNotFoundError:
+                continue
+            total += sum(int(e.get("nbytes_stored", 0)) for e in index)
+        return total
+
+    def _capacity(self, name: str) -> int:
+        if self.table is not None and name in self.table:
+            return int(self.table.get(name).capacity_bytes)
+        return 0
+
+    def demote_due(self) -> List[Tuple[int, str, str]]:
+        """Enforce each leg's capacity budget by demoting its *oldest*
+        steps one rung down (the newest snapshot always stays as hot as
+        budget allows). Demotion reads the step fully resolved from the
+        source leg and writes it self-contained on the destination, so
+        restored pytrees stay bit-exact through demoted delta chains.
+        Returns ``[(step, from_tier, to_tier), ...]``; idempotent."""
+        moved: List[Tuple[int, str, str]] = []
+        for i, name in enumerate(self.order[:-1]):
+            cap = self._capacity(name)
+            if cap <= 0:
+                continue
+            src = self.legs[name]
+            dst_name = self.order[i + 1]
+            dst = self.legs[dst_name]
+            steps = src.steps()
+            sizes = {s: self._step_stored_bytes(src, s) for s in steps}
+            while len(steps) > 1 and sum(sizes.values()) > cap:
+                step = steps.pop(0)           # oldest first, never newest
+                m = src.manifest(step)
+                n_ranks = int(m["n_ranks"])
+                nbytes = 0
+                for r in range(n_ranks):
+                    shards = src.read_rank(step, r)     # resolves refs,
+                    nbytes += dst.write_rank(step, r, shards)  # charges bw
+                dst.commit(step, n_ranks, m.get("meta"), delta_base=None)
+                src.delete_step(step, rematerialize=True)
+                sizes.pop(step)
+                # rematerialization fattened the dependents still on src
+                for s in steps:
+                    sizes[s] = self._step_stored_bytes(src, s)
+                self.stats["demotions"] += 1
+                self.stats["demoted_bytes"] += nbytes
+                moved.append((step, name, dst_name))
+        return moved

@@ -33,9 +33,9 @@ from typing import Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.tce.store import NAS_BW_PER_RANK, SharedBandwidth
-from repro.recovery import (RECOVER_IN_PLACE, REGROW, ClusterState, CostModel,
-                            Incident, RecoveryExecutor, RecoveryPlanner,
-                            fill_slots)
+from repro.recovery import (RECOVER_IN_PLACE, REGROW, SRC_CACHE, SRC_STORE,
+                            ClusterState, CostModel, Incident,
+                            RecoveryExecutor, RecoveryPlanner, fill_slots)
 from repro.recovery.executor import WAITING as PLAN_WAITING
 from repro.sim.clock import EventQueue, SimClock
 from repro.sim.faults import (FaultEvent, FaultInjector, cascade_events,
@@ -88,6 +88,14 @@ class FleetConfig:
     # cross-job correlated by failure domain) instead of firing instantly
     tee_stream: bool = False
     tee_correlation_s: float = 900.0             # domain correlation window
+    # N-tier checkpoint hierarchy knobs (repro.recovery.tiers):
+    # ``restore_prefetch`` speculatively streams the store checkpoint on the
+    # shared NAS while a job is still rescheduling, so the restore leg only
+    # pays the residual; ``tier_correlated`` models the peer-ring backup tier
+    # sharing the rack failure domain — a rack outage takes the ring with it
+    # and the recovery escalates straight to the durable store tiers
+    restore_prefetch: bool = False
+    tier_correlated: bool = False
     seed: int = 0
 
 
@@ -105,6 +113,8 @@ class _Job:
         self.next_ckpt = spec.ckpt_interval_s
         self.save_flow: Optional[Tuple[int, float]] = None   # (fid, snapshot)
         self.restore_flow: Optional[int] = None
+        self.prefetch_flow: Optional[int] = None  # speculative store stream
+        self.prefetch_done = False
         # open recovery transaction
         self.inplace = False
         self.escalate = False
@@ -112,7 +122,7 @@ class _Job:
         self.pending_replace = 0
         self.wait_start = 0.0
         self.wait_s_in_open = 0.0
-        self.restore_src = "cache"
+        self.restore_src = SRC_CACHE
         self.victim_racks: List[str] = []
         # lifetime stats
         self.admitted_at = math.inf
@@ -125,7 +135,8 @@ class _Job:
         self.counts = dict(faults_hit=0, absorbed=0, domain_hits=0,
                            shrinks=0, regrows=0, donations_given=0,
                            donations_taken=0, waits=0, saves_started=0,
-                           saves_durable=0, saves_torn=0, saves_skipped=0)
+                           saves_durable=0, saves_torn=0, saves_skipped=0,
+                           prefetch_started=0, prefetch_hits=0)
         self.wait_s = 0.0
         # CostModel view of this job's policy for the shared planner
         self.cost_model = CostModel.from_soak_policy(self.pol)
@@ -349,6 +360,26 @@ class _FleetRun:
             job.wait_s_in_open += t - job.wait_start
         job.state = RESCHEDULE
         job.until = t + job.pol.evict_reschedule_s
+        self._maybe_prefetch(job, t)
+
+    def _maybe_prefetch(self, job: _Job, t: float) -> None:
+        """Speculative restore prefetch: while the job sits in its
+        reschedule window (slot filling, rank rebinding), start streaming
+        the full store checkpoint on the shared NAS so the restore leg only
+        pays whatever hasn't drained yet. Only fired when the planner's tier
+        ranking already points at the store — prefetching a cache or
+        ring-backup restore would burn shared bandwidth for nothing."""
+        if not self.cfg.restore_prefetch or job.prefetch_flow is not None \
+                or job.prefetch_done:
+            return
+        src = self.planner.choose_restore_source(
+            inplace=job.inplace, escalated=job.escalate,
+            has_ring_backup=job.pol.has_ring_backup)
+        if src != SRC_STORE:
+            return
+        job.counts["prefetch_started"] += 1
+        job.prefetch_flow = self.nas.start(
+            t, job.spec.ckpt_bytes, f"{job.spec.name}:prefetch")
 
     def _open_planned_reshard(self, job: _Job, t: float) -> None:
         """A planned topology change (preemption donation or regrow): roll
@@ -366,6 +397,7 @@ class _FleetRun:
         job.wait_s_in_open = 0.0
         job.victim_racks = []
         job.until = t + job.pol.evict_reschedule_s
+        self._maybe_prefetch(job, t)
 
     def _preempt_donor(self, donor: _Job, t: float) -> None:
         """The donor lost a machine to a higher-priority job."""
@@ -414,14 +446,34 @@ class _FleetRun:
         job.restore_src = self.planner.choose_restore_source(
             inplace=job.inplace, escalated=job.escalate,
             has_ring_backup=pol.has_ring_backup)
-        if job.restore_src == "store_full":
-            # reshard / double-fault / no-ring-backup policy: the restore
-            # pulls the full checkpoint through the shared NAS (a flow that
-            # contends with every other job's saves and restores)
-            job.until = math.inf        # ends when the NAS flow drains
-            job.restore_flow = self.nas.start(
-                t, job.spec.ckpt_bytes, f"{job.spec.name}:restore")
-        elif job.restore_src == "cache":
+        if job.restore_src != SRC_STORE and job.prefetch_flow is not None:
+            # misprediction (the plan improved while rescheduling): drop
+            # the speculative stream, the bytes were never needed
+            self.nas.cancel(job.prefetch_flow)
+            job.prefetch_flow = None
+        if job.restore_src == SRC_STORE:
+            if job.prefetch_done:
+                # the speculative stream fully drained during the
+                # reschedule window: the restore leg is free
+                job.prefetch_done = False
+                job.counts["prefetch_hits"] += 1
+                job.until = t
+            elif job.prefetch_flow is not None:
+                # adopt the in-flight speculative stream as the restore
+                # flow: only the residual bytes remain to drain
+                job.restore_flow = job.prefetch_flow
+                job.prefetch_flow = None
+                job.counts["prefetch_hits"] += 1
+                job.until = math.inf
+            else:
+                # reshard / double-fault / no-ring-backup policy: the
+                # restore pulls the full checkpoint through the shared NAS
+                # (a flow that contends with every other job's saves and
+                # restores)
+                job.until = math.inf    # ends when the NAS flow drains
+                job.restore_flow = self.nas.start(
+                    t, job.spec.ckpt_bytes, f"{job.spec.name}:restore")
+        elif job.restore_src == SRC_CACHE:
             job.until = t + pol.inplace_restart_s + pol.restore_cache_s
         else:
             job.until = t + pol.restore_backup_s
@@ -436,6 +488,10 @@ class _FleetRun:
         view.rebind_ranks(list(view.assigned))
         job.restart_times.append(t - job.recovery_t0 - job.wait_s_in_open)
         job.downtime_s += t - job.recovery_t0
+        if job.prefetch_flow is not None:       # never adopted: stale
+            self.nas.cancel(job.prefetch_flow)
+            job.prefetch_flow = None
+        job.prefetch_done = False
         job.state = RUNNING
         job.until = math.inf
 
@@ -582,13 +638,22 @@ class _FleetRun:
         if ev.domain is not None:
             job.counts["domain_hits"] += 1
             self.correlated.setdefault((t, ev.domain), set()).add(owner)
+        # tier-correlated outage: the peer-ring backups live in the same
+        # rack failure domain as the victims, so a domain-tagged event takes
+        # the ring tier down with the nodes — escalate straight to the
+        # durable store tiers
+        tier_corr = self.cfg.tier_correlated and ev.domain is not None
         victims = [ev.node] if attributable else []
         if job.state in (RUNNING, STALLED):
             self.counts["job_faults"] += 1
             job.counts["faults_hit"] += 1
             self._open_recovery(job, t, victims, inplace=not attributable)
+            if tier_corr:
+                job.escalate = True
         else:                                   # lands in an open recovery
             job.counts["absorbed"] += 1
+            if tier_corr:
+                job.escalate = True
             if not attributable:
                 return
             self._evict_and_note(job, t, victims)
@@ -670,6 +735,12 @@ class _FleetRun:
                     job.restore_flow = None
                     job.state = WARMUP
                     job.until = t_done + job.pol.warmup_s
+                    break
+                if job.prefetch_flow == fid:
+                    # speculative stream drained before the restore leg
+                    # opened: the bytes are staged, the restore will be free
+                    job.prefetch_flow = None
+                    job.prefetch_done = True
                     break
 
     # -- main loop --------------------------------------------------------- #
@@ -777,6 +848,9 @@ class _FleetRun:
                 "repair_wait_s": round(job.wait_s, 1),
             },
             "restore_sources": dict(sorted(job.restore_sources.items())),
+            **({"prefetch": {"started": job.counts["prefetch_started"],
+                             "hits": job.counts["prefetch_hits"]}}
+               if self.cfg.restore_prefetch else {}),
             "saves": {k.split("_", 1)[1]: v for k, v in job.counts.items()
                       if k.startswith("saves_")},
             "faults": {"hit": job.counts["faults_hit"],
@@ -809,6 +883,9 @@ class _FleetRun:
                 "mtbf_node_days": cfg.mtbf_node_days,
                 "rack_mtbf_days": cfg.rack_mtbf_days,
                 "n_jobs": len(cfg.jobs),
+                **({"restore_prefetch": True} if cfg.restore_prefetch
+                   else {}),
+                **({"tier_correlated": True} if cfg.tier_correlated else {}),
             },
             "makespan_days": round(elapsed / DAY_S, 6),
             "fleet": {

@@ -20,16 +20,29 @@ The policy itself is selectable at runtime (Chameleon-style): ``"transom"``
 (the paper's escalation ladder), ``"cost"`` (pure cost minimisation over the
 same candidates) and ``"no_shrink"`` (never run degraded; wait for repairs).
 """
+from .cadence import CADENCE_ADAPT, CadenceController  # noqa: F401
 from .executor import RecoveryExecutor, fill_slots  # noqa: F401
 from .planner import (CLAIM_SPARE, GIVE_UP, PLANNER_POLICIES,  # noqa: F401
                       PREEMPT_DONOR, RECOVER_IN_PLACE, REGROW, SHRINK,
-                      STAY_SHRUNK, WAIT_FOR_REPAIR, Candidate, ClusterState,
-                      CostModel, DecisionLog, Incident, RecoveryPlan,
-                      RecoveryPlanner)
+                      SRC_BACKUP, SRC_CACHE, SRC_STORE, STAY_SHRUNK,
+                      WAIT_FOR_REPAIR, Candidate, ClusterState, CostModel,
+                      DecisionLog, Incident, RecoveryPlan, RecoveryPlanner,
+                      RestorePlan)
+from .tiers import (LEGACY_SOURCE_BY_TIER, TIER_COLD,  # noqa: F401
+                    TIER_DEVICE, TIER_DRAM, TIER_NAS, TIER_PEER, TIER_SSD,
+                    Tier, TierTable, default_tiers, three_leg_tiers,
+                    tiers_down_for)
 
 __all__ = [
     "Candidate", "ClusterState", "CostModel", "DecisionLog", "Incident",
-    "RecoveryExecutor", "RecoveryPlan", "RecoveryPlanner", "fill_slots",
+    "RecoveryExecutor", "RecoveryPlan", "RecoveryPlanner", "RestorePlan",
+    "fill_slots",
     "PLANNER_POLICIES", "RECOVER_IN_PLACE", "CLAIM_SPARE", "PREEMPT_DONOR",
     "SHRINK", "WAIT_FOR_REPAIR", "REGROW", "STAY_SHRUNK", "GIVE_UP",
+    "SRC_CACHE", "SRC_BACKUP", "SRC_STORE",
+    "Tier", "TierTable", "default_tiers", "three_leg_tiers",
+    "tiers_down_for", "LEGACY_SOURCE_BY_TIER",
+    "TIER_DEVICE", "TIER_DRAM", "TIER_PEER", "TIER_SSD", "TIER_NAS",
+    "TIER_COLD",
+    "CadenceController", "CADENCE_ADAPT",
 ]

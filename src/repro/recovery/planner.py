@@ -38,7 +38,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .tiers import (LEGACY_SOURCE_BY_TIER, TIER_DEVICE, TIER_DRAM,
+                    TIER_PEER, TierTable, three_leg_tiers)
 
 # -- decision / action names (also the grep-able vocabulary of the log) ---- #
 RECOVER_IN_PLACE = "recover_in_place"
@@ -61,6 +64,10 @@ CONFIDENCE_FLOOR = 0.5
 SRC_CACHE = "cache"
 SRC_BACKUP = "backup"
 SRC_STORE = "store_full"
+
+# the classic cache→ring-backup→NAS waterfall as a TierTable; planning
+# against it reproduces the historical decision table verbatim
+_LEGACY_TABLE = three_leg_tiers()
 
 
 @dataclass(frozen=True)
@@ -104,6 +111,12 @@ class CostModel:
     restore_cache_s: float = 10.0
     restore_backup_s: float = 16.0
     restore_store_s: float = 255.0
+    # N-tier hierarchy legs beyond the classic 3 (device HBM snapshot,
+    # rack burst-buffer SSD, cold object store); tier-named sources from
+    # choose_restore_plan resolve through these
+    restore_device_s: float = 1.0
+    restore_ssd_s: float = 30.0
+    restore_cold_s: float = 900.0
     # a stalled recovery with no repair ETA is costed at this horizon
     unknown_repair_s: float = 24 * 3600.0
     # confidence-weighted terms (only consulted when the incident carries
@@ -137,9 +150,17 @@ class CostModel:
                    restore_store_s=costs.restore_from_backup)
 
     def restore_s(self, source: str) -> float:
+        """Modelled restore seconds for a waterfall leg — accepts both the
+        legacy 3-leg names and the tier names of choose_restore_plan."""
         return {SRC_CACHE: self.restore_cache_s,
                 SRC_BACKUP: self.restore_backup_s,
-                SRC_STORE: self.restore_store_s}[source]
+                SRC_STORE: self.restore_store_s,
+                "device": self.restore_device_s,
+                "dram": self.restore_cache_s,
+                "peer": self.restore_backup_s,
+                "ssd": self.restore_ssd_s,
+                "nas": self.restore_store_s,
+                "cold": self.restore_cold_s}[source]
 
 
 @dataclass(frozen=True)
@@ -155,6 +176,23 @@ class Candidate:
             else round(self.cost_s, 1)
         return {"action": self.action, "cost_s": cost,
                 "feasible": self.feasible, "reason": self.reason}
+
+
+@dataclass(frozen=True)
+class RestorePlan:
+    """A tier-ranked restore plan: every eligible tier hottest-first.
+
+    ``source`` is the tier the restore should read from; the rest of
+    ``tiers`` is the fallback order if that tier turns out empty, and is
+    also what a speculative prefetch streams from while TOL is still
+    electing/warming replacements."""
+    tiers: Tuple[str, ...]
+    source: str
+
+    def legacy_source(self) -> str:
+        """The 3-leg waterfall name of the chosen tier (decision-log and
+        SoakPolicy cost-table vocabulary)."""
+        return LEGACY_SOURCE_BY_TIER.get(self.source, SRC_STORE)
 
 
 @dataclass(frozen=True)
@@ -203,6 +241,49 @@ class RecoveryPlanner:
 
     # -- restore-source decision (shared by all engines) ----------------- #
     @staticmethod
+    def choose_restore_plan(table: TierTable, *, inplace: bool,
+                            escalated: bool, has_ring_backup: bool = True,
+                            down: Iterable[str] = ()) -> RestorePlan:
+        """Rank the hierarchy's tiers for one restore, hottest first.
+
+        Eligibility per tier (top to bottom of ``table``):
+
+        * a tier named in ``down`` (failed hardware, a brownout, a
+          correlated rack loss) is skipped outright;
+        * without a ring backup (the manual baseline keeps no volatile
+          replicas at all) only durable site-domain tiers qualify;
+        * durable tiers always qualify;
+        * the peer ring survives the victim node but not an escalated
+          transaction (ring-adjacent double death / resize);
+        * node-volatile tiers (device HBM, host DRAM) need the process to
+          restart *in place* on surviving hardware — and even then an
+          escalated transaction invalidates them (ring resize reshards).
+
+        If nothing qualifies the plan falls back to the coldest tier —
+        the durable floor of the hierarchy is never unreachable.
+        """
+        down = set(down)
+        ranked = []
+        for t in table.tiers:
+            if t.name in down:
+                continue
+            if not has_ring_backup:
+                if t.durable and t.failure_domain == "site":
+                    ranked.append(t.name)
+                continue
+            if t.durable:
+                ranked.append(t.name)
+            elif t.name == TIER_PEER:
+                if not escalated:
+                    ranked.append(t.name)
+            elif t.name in (TIER_DEVICE, TIER_DRAM):
+                if inplace and not escalated:
+                    ranked.append(t.name)
+        if not ranked:
+            ranked = [table.coldest().name]
+        return RestorePlan(tuple(ranked), ranked[0])
+
+    @staticmethod
     def choose_restore_source(*, inplace: bool, escalated: bool,
                               has_ring_backup: bool = True) -> str:
         """Which TCE waterfall leg a recovery restores through.
@@ -213,14 +294,17 @@ class RecoveryPlanner:
         reshard) — falls through to the full store read, even if it began
         as an in-place restart. Plain in-place restarts read the local
         cache; otherwise the ring backup serves the restore.
+
+        This is the 3-leg view of :meth:`choose_restore_plan`: plan over
+        the legacy dram→peer→nas table, map the winning tier back to its
+        waterfall name. Engines that model only the classic waterfall keep
+        calling this; tiered engines call ``choose_restore_plan`` with
+        their own table.
         """
-        if not has_ring_backup:
-            return SRC_STORE
-        if escalated:
-            return SRC_STORE
-        if inplace:
-            return SRC_CACHE
-        return SRC_BACKUP
+        plan = RecoveryPlanner.choose_restore_plan(
+            _LEGACY_TABLE, inplace=inplace, escalated=escalated,
+            has_ring_backup=has_ring_backup)
+        return plan.legacy_source()
 
     # -- candidate scoring ------------------------------------------------ #
     def _candidates(self, inc: Incident, st: ClusterState,

@@ -464,6 +464,23 @@ def _weeklong_soak(seed: int = 0) -> dict:
     return dict(rep, scenario="weeklong_soak")
 
 
+@scenario("tiered_outage",
+          "A week-long soak over the N-tier checkpoint hierarchy with an "
+          "adaptive checkpoint cadence: a two-day NAS brownout forces "
+          "peer/SSD-tier restores and the rising rollback cost tightens "
+          "the cadence (visible as cadence_adapt decisions).")
+def _tiered_outage(seed: int = 0) -> dict:
+    from .soak import DAY_S, SoakConfig, run_soak
+
+    rep = run_soak(SoakConfig(ideal_days=7.0, n_nodes=16, n_spares=2,
+                              mtbf_node_days=9.0, p_cascade=0.3,
+                              rack_mtbf_days=25.0, tiers=True,
+                              adaptive_cadence=True,
+                              nas_outages=((2 * DAY_S, 2 * DAY_S),)),
+                   seed=seed)
+    return dict(rep, scenario="tiered_outage")
+
+
 @scenario("policy_frontier",
           "A quick policy sweep (checkpoint cadence x spare pool) over the "
           "soak engine: TRANSOM vs manual baseline on the same fault "

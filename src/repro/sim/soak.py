@@ -31,12 +31,13 @@ import math
 import zlib
 from collections import Counter
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.recovery import (ClusterState, CostModel, Incident,
-                            RecoveryExecutor, RecoveryPlanner, fill_slots)
+from repro.recovery import (TIER_NAS, CadenceController, ClusterState,
+                            CostModel, Incident, RecoveryExecutor,
+                            RecoveryPlanner, default_tiers, fill_slots)
 
 from .clock import EventQueue, SimClock
 from .faults import (FaultEvent, FaultInjector, cascade_events,
@@ -125,6 +126,17 @@ class SoakConfig:
     # streaming that category's signature trace through the Eagle Eye
     # scorer (deterministic, per-category) instead of an exponential draw
     tee_stream: bool = False
+    # ---- N-tier checkpoint hierarchy ---------------------------------- #
+    # tiers=True plans every restore over the full default_tiers()
+    # hierarchy (device/dram/peer/ssd/nas/cold) via choose_restore_plan —
+    # a correlated rack loss takes out the peer AND ssd tiers together;
+    # nas_outages=((start_s, duration_s), ...) browns out the NAS tier so
+    # restores in the window fall to the surviving tiers;
+    # adaptive_cadence lets a CadenceController tighten/relax the save
+    # interval as the decision log shows rollback costs rising/cooling
+    tiers: bool = False
+    nas_outages: Tuple[Tuple[float, float], ...] = ()
+    adaptive_cadence: bool = False
     seed: int = 0
 
 
@@ -164,11 +176,17 @@ class _SoakRun:
         # through the shared cost-aware planner (this engine keeps mechanism)
         self.planner = RecoveryPlanner(
             cfg.planner_policy, costs=CostModel.from_soak_policy(self.pol))
+        # N-tier hierarchy + adaptive cadence (both off by default: the
+        # classic 3-leg waterfall and a fixed interval)
+        self.tier_table = default_tiers() if cfg.tiers else None
+        self.cadence = (CadenceController(self.pol.ckpt_interval_s,
+                                          log=self.planner.log)
+                        if cfg.adaptive_cadence else None)
 
         self.need = cfg.ideal_days * DAY_S   # productive full-fleet seconds
         self.done = 0.0
         self.last_ckpt = 0.0
-        self.next_ckpt = self.pol.ckpt_interval_s
+        self.next_ckpt = self._interval()
         self.lost_s = 0.0
         self.ckpt_overhead_s = 0.0
         self.restarts: List[float] = []
@@ -311,6 +329,37 @@ class _SoakRun:
             return None
         return max(due - self.clock.seconds, 1.0)
 
+    def _interval(self) -> float:
+        """The save cadence in force right now (adaptive or fixed)."""
+        return (self.cadence.interval_s if self.cadence is not None
+                else self.pol.ckpt_interval_s)
+
+    def _tiers_down(self) -> Set[str]:
+        """Tiers unavailable at this modelled instant (NAS brownouts)."""
+        down: Set[str] = set()
+        t = self.clock.seconds
+        for start, dur in self.cfg.nas_outages:
+            if start <= t < start + dur:
+                down.add(TIER_NAS)
+        return down
+
+    def _restore_source(self, *, inplace: bool, escalated: bool,
+                        rack_corr: bool) -> str:
+        """The planner's restore leg for this recovery — tier-ranked over
+        the full hierarchy when tiers are on, the classic 3-leg waterfall
+        otherwise. Never hardcodes a tier order (grep-gated in CI)."""
+        if self.tier_table is None:
+            return self.planner.choose_restore_source(
+                inplace=inplace, escalated=escalated,
+                has_ring_backup=self.pol.has_ring_backup)
+        down = self._tiers_down()
+        if rack_corr:
+            down.update(self.tier_table.correlated("rack"))
+        plan = self.planner.choose_restore_plan(
+            self.tier_table, inplace=inplace, escalated=escalated,
+            has_ring_backup=self.pol.has_ring_backup, down=down)
+        return plan.source
+
     def _recover(self, victims: Set[str],
                  ev: Optional[FaultEvent] = None) -> None:
         """One recovery transaction on the shared clock: detection/checks ->
@@ -330,6 +379,10 @@ class _SoakRun:
         processed: Set[str] = set()
         mid_restore_join = False
         adjacent = False
+        # a whole-rack outage (domain event) or 2+ victims in one rack is a
+        # correlated loss: the rack-scoped tiers (peer ring, burst-buffer
+        # ssd) must be assumed gone along with the machines
+        rack_corr = ev is not None and ev.domain is not None
         while victims - processed:
             fresh = sorted(victims - processed)
             adjacent = adjacent or self._ring_adjacent(victims)
@@ -337,6 +390,7 @@ class _SoakRun:
             # keep replacements out of that failure domain
             rack_hits = Counter(topo.domain_of(v) for v in fresh)
             avoid = {r for r, c in rack_hits.items() if c >= 2}
+            rack_corr = rack_corr or bool(avoid)
             for v in fresh:
                 topo.evict(v, self.clock.seconds)
             if processed:
@@ -356,30 +410,34 @@ class _SoakRun:
                              n_target=len(topo.assigned), min_nodes=1,
                              has_ring_backup=pol.has_ring_backup,
                              progress_at_risk_s=self.done - self.last_ckpt))
-            source = self.planner.choose_restore_source(
-                inplace=True, escalated=False,
-                has_ring_backup=pol.has_ring_backup)
+            source = self._restore_source(inplace=True, escalated=False,
+                                          rack_corr=False)
             self.clock.advance(pol.inplace_restart_s)
         else:
             n_after = len(topo.assigned)
             if n_after > n_prev:
                 self.counts["regrows"] += 1
             # which waterfall leg serves this restore is the planner's call
-            source = self.planner.choose_restore_source(
+            source = self._restore_source(
                 inplace=False,
                 escalated=(mid_restore_join or adjacent
                            or n_after != n_prev),
-                has_ring_backup=pol.has_ring_backup)
+                rack_corr=rack_corr)
         # one cost table: the same CostModel the planner scored with
         cost = self.planner.costs.restore_s(source)
         self.clock.advance(cost + pol.warmup_s)
         topo.rebind_ranks(list(topo.assigned))
         self.ring_n = max(len(topo.assigned), 1)
 
+        if self.cadence is not None:
+            # rollback cost of this recovery = work thrown away + the
+            # restore leg it forced; rising costs tighten the cadence
+            self.cadence.observe_incident(
+                self.clock.seconds, (self.done - self.last_ckpt) + cost)
         self.restore_sources[source] = self.restore_sources.get(source, 0) + 1
         self.lost_s += self.done - self.last_ckpt
         self.done = self.last_ckpt
-        self.next_ckpt = self.done + pol.ckpt_interval_s
+        self.next_ckpt = self.done + self._interval()
         # restart latency is the recovery *machinery* (detect, checks,
         # reschedule, restore, warm-up) — repair-capacity stalls (waiting for
         # a machine to come back) are reported separately as repair_wait_s
@@ -467,7 +525,7 @@ class _SoakRun:
                 clock.advance(pol.ckpt_save_stall_s)
                 self.ckpt_overhead_s += pol.ckpt_save_stall_s
                 self.last_ckpt = self.done
-                self.next_ckpt = self.done + pol.ckpt_interval_s
+                self.next_ckpt = self.done + self._interval()
         return self._report()
 
     def _report(self) -> dict:
@@ -489,7 +547,14 @@ class _SoakRun:
                 "rack_mtbf_days": cfg.rack_mtbf_days,
                 # only stamped when on: default report shape stays pinned
                 **({"tee_stream": True} if cfg.tee_stream else {}),
+                **({"tiers": True} if cfg.tiers else {}),
+                **({"adaptive_cadence": True}
+                   if cfg.adaptive_cadence else {}),
+                **({"nas_outages": [list(o) for o in cfg.nas_outages]}
+                   if cfg.nas_outages else {}),
             },
+            **({"cadence": self.cadence.to_report()}
+               if self.cadence is not None else {}),
             "end_to_end_days": round(elapsed / DAY_S, 4),
             "effective_time_ratio": round(self.need / elapsed, 4),
             "lost_steps": int(round(self.lost_s / cfg.step_time_s)),

@@ -117,6 +117,16 @@ class Substrate(Protocol):
         Returns the step to resume from (0 = no checkpoint, from scratch)."""
         ...
 
+    def prefetch_restore(self) -> Optional[int]:
+        """Speculatively stage the freshest recoverable checkpoint for the
+        next ``restore_via_tce`` while recovery overhead (error checks,
+        reschedule, process restarts) runs — the simulated substrate starts
+        a modelled tier read whose residual the restore pays, the process
+        substrate warms the OS page cache controller-side. Returns the
+        staged step, or None when nothing could be staged. Purely a
+        latency hint: restore correctness never depends on it."""
+        ...
+
     def step_metrics(self, upto: int) -> StepSlice:
         """Train from the current step up to (exclusive) ``upto``. Returns
         the slice result; if a rank died, ``fault`` is set and ``step`` is

@@ -105,6 +105,9 @@ class DriveConfig:
     seed: int = 0
     max_restarts: int = 8
     costs: PhaseCosts = field(default_factory=PhaseCosts)
+    # speculative restore prefetch: stage the checkpoint the moment a fault
+    # is detected, so the restore leg overlaps the check/reschedule window
+    prefetch: bool = True
     scenario: str = "substrate_run"
 
 
@@ -143,6 +146,8 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
     restarts_inplace = restarts_resched = 0
     lost_steps = tee_verdicts = 0
     downtime = 0.0
+    prefetch_restores = 0
+    prefetch_overlap_s = 0.0
     restart_times: List[float] = []
     trace_gen = scorer = None
     if sub.tee is not None:
@@ -216,6 +221,10 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
         t_down = costs.tee_detect
         fsm.to(JobState.CHECKING,
                f"ranks {list(fault.dead_ranks)} dead at step {step}")
+        # speculative restore prefetch: stage the freshest checkpoint NOW,
+        # so its bytes stream while the checks / reschedule / process
+        # restarts below run — the restore leg then pays only the residual
+        pf_step = sub.prefetch_restore() if cfg.prefetch else None
 
         # streaming TEE scoring per dead rank (advisory attribution: only
         # hardware/infra checks below justify eviction) — the fault window
@@ -293,7 +302,14 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
             if outcome == GAVE_UP:
                 fsm.to(JobState.FAILED, "no replacement nodes")
                 break
-            t_down += costs.evict_reschedule + costs.restore_from_backup
+            leg = costs.restore_from_backup
+            if pf_step is not None:
+                # the staged stream overlapped the check+reschedule window
+                overlap = min(leg, costs.error_check + costs.evict_reschedule)
+                prefetch_overlap_s += overlap
+                prefetch_restores += 1
+                leg -= overlap
+            t_down += costs.evict_reschedule + leg
             restarts_resched += 1
             sub.start_ranks(assignments)
         else:
@@ -306,7 +322,13 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
                 ClusterState(n_assigned=sub.n_ranks, n_target=sub.n_ranks,
                              min_nodes=sub.n_ranks),
                 costs=costs_cm, job=sub.job_id)
-            t_down += costs.inplace_restart + costs.restore_from_cache
+            leg = costs.restore_from_cache
+            if pf_step is not None:
+                overlap = min(leg, costs.error_check + costs.inplace_restart)
+                prefetch_overlap_s += overlap
+                prefetch_restores += 1
+                leg -= overlap
+            t_down += costs.inplace_restart + leg
             restarts_inplace += 1
             sub.start_ranks()
 
@@ -350,6 +372,8 @@ def run_protected(sub: Substrate, cfg: DriveConfig,
         "final_loss": losses[-1][1] if losses else None,
         "modeled": {"downtime_s": round(downtime, 3),
                     "restart_times_s": restart_times,
+                    "prefetch": {"restores": prefetch_restores,
+                                 "overlap_s": round(prefetch_overlap_s, 3)},
                     "clock_s": round(sub.clock.seconds, 3)},
         "state_history": [(round(t, 3), s.value, r)
                           for t, s, r in fsm.history],

@@ -66,6 +66,7 @@ class SimSubstrate:
     _init_state: Optional[Dict[str, np.ndarray]] = None
     _pending: Dict[int, str] = field(default_factory=dict)
     _stall_next: Dict[int, float] = field(default_factory=dict)
+    _prefetch: Optional["object"] = None   # in-flight PrefetchHandle
     last_rank_walls: Dict[int, float] = field(default_factory=dict)
 
     @property
@@ -164,10 +165,19 @@ class SimSubstrate:
         self.tce.save(step, self._state)
         return True
 
-    def restore_via_tce(self) -> int:
+    def prefetch_restore(self) -> Optional[int]:
         self.tce.reconciler.quiesce(10)
         try:
-            ck_step, flat = self.tce.restore()
+            self._prefetch = self.tce.prefetch_restore()
+        except (FileNotFoundError, AttributeError):
+            self._prefetch = None
+        return None if self._prefetch is None else int(self._prefetch.step)
+
+    def restore_via_tce(self) -> int:
+        self.tce.reconciler.quiesce(10)
+        pf, self._prefetch = self._prefetch, None
+        try:
+            ck_step, flat = self.tce.restore(prefetch=pf)
         except FileNotFoundError:
             self._state = copy.deepcopy(self._init_state)
             self._step = 0
