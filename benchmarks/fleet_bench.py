@@ -10,22 +10,34 @@ emits a deterministic ``BENCH_fleet.json`` for ``scripts/bench_gate.py``
 * the **preemption gain** — how much faster the high-priority job recovers
   when a low-priority job donates a node — must not collapse;
 * the NAS arbiter's measured contention slowdown must stay ~2x for two
-  equal concurrent flows (processor sharing is exact, not approximate).
+  equal concurrent flows (processor sharing is exact, not approximate);
+* the **dispatch A/B** — the indexed event dispatcher must produce a report
+  byte-identical to ``legacy_dispatch`` at the 256-job scale point AND run
+  at least 5x faster (``measured.checks``);
+* the ``10k_nodes_512_jobs_month`` replay must stay interactive
+  (wall <= 60 s, ``measured.checks``).
+
+Wall times and speedups live under the volatile ``measured`` key (stripped
+by the CI double-run diff); everything else in the artifact is
+deterministic.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from dataclasses import replace
 
 from repro.core.tce.store import SharedBandwidth
+from repro.fleet.engine import run_fleet, set_profile
 from repro.fleet.presets import run_preset
+from repro.sim.replay import ReplayPreset, run_replay
 
 # presets whose fleet-level utilization is gated (priority_preemption emits
 # a comparison report, not a single fleet report, and is gated separately)
 GATED_PRESETS = ("two_jobs_rack_outage", "spare_pool_starvation",
                  "mixed_policy_fleet", "fleet_week_soak",
-                 "shrink_then_regrow")
+                 "shrink_then_regrow", "demotion_contention")
 
 
 def nas_contention_micro(bw: float = 284.4e6, nbytes: float = 8e9) -> dict:
@@ -41,6 +53,65 @@ def nas_contention_micro(bw: float = 284.4e6, nbytes: float = 8e9) -> dict:
         "contended_s": round(contended, 3),
         "slowdown": round(contended / solo, 4),
     }
+
+
+def dispatch_ab(seed: int = 0):
+    """Same-machine dispatcher A/B at the 256-job scale point (the dense
+    1k-node pod), on a shortened horizon so the legacy poll loop stays
+    bench-sized. Returns ``(deterministic_section, measured_section)``:
+    tick counts and the byte-equivalence verdict are deterministic, wall
+    times and the speedup are measured."""
+    preset = ReplayPreset(
+        "bench_ab_256", "bench-local dispatcher A/B point", mix="table1",
+        scale="1k_dense", ideal_hours=40.0, horizon_days=4.0)
+    cfg = preset.build(seed)
+    set_profile(True)
+    try:
+        indexed = run_fleet(cfg, seed=seed)
+        legacy = run_fleet(replace(cfg, legacy_dispatch=True), seed=seed)
+    finally:
+        set_profile(False)
+    m_i = indexed.pop("measured")
+    m_l = legacy.pop("measured")
+    equivalent = (json.dumps(indexed, sort_keys=True)
+                  == json.dumps(legacy, sort_keys=True))
+    det = {
+        "scale": preset.scale,
+        "n_jobs": len(cfg.jobs),
+        "ideal_hours": preset.ideal_hours,
+        "horizon_days": preset.horizon_days,
+        "reports_equivalent": equivalent,
+        "ticks": {"indexed": m_i["ticks"], "legacy": m_l["ticks"]},
+        "makespan_days": indexed["makespan_days"],
+        "utilization": indexed["fleet"]["utilization"],
+    }
+    meas = {
+        "wall_s": {"indexed": m_i["wall_s"], "legacy": m_l["wall_s"]},
+        "speedup_x": round(m_l["wall_s"] / max(m_i["wall_s"], 1e-9), 2),
+        "profile_s": m_i.get("profile_s", {}),
+    }
+    return det, meas
+
+
+def preset_512(seed: int = 0):
+    """The 10k-node / 512-job month replay — the control-plane stress point
+    the indexed dispatcher exists for. Deterministic summary + measured
+    wall time (gated <= 60 s)."""
+    set_profile(True)
+    try:
+        rep = run_replay("10k_nodes_512_jobs_month", seed=seed)
+    finally:
+        set_profile(False)
+    m = rep.pop("measured")
+    det = {
+        "replay": rep["replay"],
+        "makespan_days": rep["makespan_days"],
+        "utilization": rep["fleet"]["utilization"],
+        "faults_hit_jobs": rep["faults"]["hit_jobs"],
+        "ticks": m["ticks"],
+    }
+    meas = {"wall_s": m["wall_s"], "ticks_per_s": m["ticks_per_s"]}
+    return det, meas
 
 
 def build_payload(seed: int = 0) -> dict:
@@ -64,6 +135,8 @@ def build_payload(seed: int = 0) -> dict:
         }
     pre = run_preset("priority_preemption", seed=seed)
     hi = pre["hi_recovery_s"]
+    ab_det, ab_meas = dispatch_ab(seed=seed)
+    p512_det, p512_meas = preset_512(seed=seed)
     return {
         "bench": "fleet",
         "seed": seed,
@@ -75,6 +148,17 @@ def build_payload(seed: int = 0) -> dict:
             "recovers_faster": pre["preemption_recovers_faster"],
         },
         "nas_contention": nas_contention_micro(),
+        "dispatch": ab_det,
+        "preset_512": p512_det,
+        "measured": {
+            "dispatch_ab": ab_meas,
+            "preset_512": p512_meas,
+            "checks": {
+                "dispatch_reports_equivalent": ab_det["reports_equivalent"],
+                "dispatch_speedup_over_5x": ab_meas["speedup_x"] >= 5.0,
+                "preset_512_under_60s": p512_meas["wall_s"] <= 60.0,
+            },
+        },
     }
 
 
@@ -90,6 +174,8 @@ def run(verbose: bool = True, json_path: str = None):
 
     pre = payload["preemption"]
     nas = payload["nas_contention"]
+    ab = payload["measured"]["dispatch_ab"]
+    p512 = payload["measured"]["preset_512"]
     if verbose:
         for name, p in sorted(payload["presets"].items()):
             print(f"  {name:<24s} util={p['utilization']:.4f} "
@@ -102,11 +188,19 @@ def run(verbose: bool = True, json_path: str = None):
         print(f"  nas contention: {nas['solo_s']:.1f}s solo -> "
               f"{nas['contended_s']:.1f}s contended "
               f"({nas['slowdown']:.2f}x)")
+        print(f"  dispatch A/B (256 jobs): legacy {ab['wall_s']['legacy']:.2f}s"
+              f" -> indexed {ab['wall_s']['indexed']:.2f}s "
+              f"({ab['speedup_x']:.1f}x, equivalent="
+              f"{payload['dispatch']['reports_equivalent']})")
+        print(f"  512-job month replay: {p512['wall_s']:.2f}s wall "
+              f"({p512['ticks_per_s']:.0f} ticks/s)")
     return {
         "name": "fleet_bench",
         "us_per_call": wall / max(len(payload["presets"]) + 1, 1) * 1e6,
         "derived": (f"preemption_gain={pre['gain']:.1f}x "
                     f"nas_slowdown={nas['slowdown']:.2f}x "
+                    f"dispatch_ab={ab['speedup_x']:.1f}x "
+                    f"wall512={p512['wall_s']:.1f}s "
                     f"presets={len(payload['presets'])}"),
         "checks": {
             "preemption_recovers_faster": pre["recovers_faster"],
@@ -116,6 +210,7 @@ def run(verbose: bool = True, json_path: str = None):
                 p["utilization"] > 0 for p in payload["presets"].values()),
             "one_clock_everywhere": all(
                 p["one_clock"] for p in payload["presets"].values()),
+            **payload["measured"]["checks"],
         },
     }
 

@@ -10,8 +10,11 @@ fails (exit 1) on regression. The artifact kind is auto-detected:
   over the manual baseline collapses, or if grid points disappeared.
 * ``BENCH_fleet.json`` (``benchmarks/fleet_bench.py --json``): fails if any
   fleet preset's utilization regresses past the tolerance, a preset
-  disappears, the preemption gain collapses, or the NAS processor-sharing
-  slowdown drifts off 2x for two equal flows.
+  disappears, the preemption gain collapses, the NAS processor-sharing
+  slowdown drifts off 2x for two equal flows, the indexed dispatcher stops
+  being byte-identical to ``legacy_dispatch`` at the 256-job A/B point, or
+  any measured check (>= 5x dispatch speedup, 512-job month replay <= 60 s
+  wall) went false.
 * ``BENCH_tce.json`` (``benchmarks/fig8_tce.py --json``): fails if any
   paper-band check went false, the modeled 175B save speedup leaves the
   paper's 10-40x band, bytes physically copied per steady-state save
@@ -116,6 +119,20 @@ def gate_fleet(fresh: dict, baseline: dict,
     if not 1.9 < slowdown < 2.1:
         fails.append(f"NAS processor-sharing slowdown drifted off 2x for "
                      f"two equal flows: {slowdown:.3f}x")
+    # dispatcher A/B: the indexed dispatcher must stay byte-equivalent to
+    # the legacy poll loop at the 256-job point, and the measured checks
+    # (>= 5x speedup over legacy, 512-job month replay <= 60 s wall) carry
+    # the throughput-ratio and wall-time-ceiling gates
+    disp = fresh.get("dispatch")
+    if "dispatch" in baseline:
+        if disp is None:
+            fails.append("dispatch A/B section missing from fresh bench")
+        elif not disp.get("reports_equivalent"):
+            fails.append("indexed dispatcher report no longer byte-identical "
+                         "to legacy_dispatch at the 256-job A/B point")
+    for name, ok in fresh.get("measured", {}).get("checks", {}).items():
+        if not ok:
+            fails.append(f"fleet measured check {name!r} went false")
     return fails
 
 
@@ -287,9 +304,15 @@ def main(argv=None) -> int:
             print(f"  - {msg}", file=sys.stderr)
         return 1
     if fresh.get("bench") == "fleet":
-        print(f"bench gate OK: {len(baseline['presets'])} fleet presets "
-              f"within {args.tolerance:.0%} of baseline; preemption gain "
-              f"{fresh['preemption']['gain']:.1f}x")
+        msg = (f"bench gate OK: {len(baseline['presets'])} fleet presets "
+               f"within {args.tolerance:.0%} of baseline; preemption gain "
+               f"{fresh['preemption']['gain']:.1f}x")
+        ab = fresh.get("measured", {}).get("dispatch_ab")
+        if ab:
+            msg += (f"; indexed dispatch {ab['speedup_x']:.1f}x over legacy, "
+                    f"512-job replay "
+                    f"{fresh['measured']['preset_512']['wall_s']:.1f}s")
+        print(msg)
     elif fresh.get("bench") == "tce":
         print(f"bench gate OK: 175B save "
               f"{fresh['models']['gpt3-175b']['save_x']:.0f}x, "

@@ -126,10 +126,30 @@ echo "== bench regression gate: Fig. 6 sweep vs committed baseline =="
 python benchmarks/fig6_e2e.py --quiet --json "$TMP/BENCH_fig6.json"
 python scripts/bench_gate.py "$TMP/BENCH_fig6.json"
 
+echo "== determinism gate: 512-job month replay under indexed dispatch =="
+# the control-plane stress preset must stay byte-identical across runs —
+# wakeup heaps, vectorized banking and the NAS epoch cache change only the
+# wall time, never the report
+python -m repro.sim.replay --run 10k_nodes_512_jobs_month --seed 0 \
+    --json "$TMP/replay512_a.json" > /dev/null
+python -m repro.sim.replay --run 10k_nodes_512_jobs_month --seed 0 \
+    --json "$TMP/replay512_b.json" > /dev/null
+diff "$TMP/replay512_a.json" "$TMP/replay512_b.json" \
+    || { echo "FAIL: 512-job replay is nondeterministic" >&2; exit 1; }
+
 echo "== bench regression gate: fleet bench vs committed baseline =="
 python benchmarks/fleet_bench.py --quiet --json "$TMP/BENCH_fleet.json"
 python benchmarks/fleet_bench.py --quiet --json "$TMP/BENCH_fleet_b.json"
-diff "$TMP/BENCH_fleet.json" "$TMP/BENCH_fleet_b.json" \
+# dispatcher A/B wall times and speedups live under "measured" and are
+# host-dependent — strip, then the artifact must be byte-identical
+python - "$TMP/BENCH_fleet.json" "$TMP/BENCH_fleet_b.json" <<'EOF'
+import json, sys
+for p in sys.argv[1:]:
+    d = json.load(open(p))
+    d.pop("measured", None)
+    json.dump(d, open(p + ".det", "w"), indent=1, sort_keys=True)
+EOF
+diff "$TMP/BENCH_fleet.json.det" "$TMP/BENCH_fleet_b.json.det" \
     || { echo "FAIL: fleet bench is nondeterministic" >&2; exit 1; }
 python scripts/bench_gate.py "$TMP/BENCH_fleet.json"
 

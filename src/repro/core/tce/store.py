@@ -82,6 +82,11 @@ class SharedBandwidth:
         self._next_id = 0
         self._flows: Dict[int, List] = {}   # id -> [remaining_bytes, label]
         self._done: List[tuple] = []        # (t_done, id, label)
+        # rate-change epoch: bumped whenever the active flow set changes
+        # (start / cancel / completion), i.e. whenever every survivor's fair
+        # share — and therefore any cached next_completion() prediction —
+        # becomes stale. Callers key caches on (epoch, virtual_time).
+        self.epoch = 0
         self.stats = {"flows": 0, "bytes": 0, "contended_flows": 0,
                       "peak_concurrency": 0}
 
@@ -89,12 +94,18 @@ class SharedBandwidth:
     def active(self) -> int:
         return len(self._flows)
 
+    @property
+    def virtual_time(self) -> float:
+        """The arbiter's internal virtual clock (last drain point)."""
+        return self._t
+
     def start(self, t: float, nbytes: float, label: str = "flow") -> int:
         """Register a flow of ``nbytes`` starting at modelled time ``t``."""
         self._drain(t)
         fid = self._next_id
         self._next_id += 1
         self._flows[fid] = [float(max(nbytes, 1.0)), label]
+        self.epoch += 1
         self.stats["flows"] += 1
         self.stats["bytes"] += int(nbytes)
         if len(self._flows) > 1:
@@ -105,7 +116,8 @@ class SharedBandwidth:
 
     def cancel(self, fid: int) -> None:
         """Abort a flow (a crash tears down an in-flight save)."""
-        self._flows.pop(fid, None)
+        if self._flows.pop(fid, None) is not None:
+            self.epoch += 1
 
     def next_completion(self) -> Optional[float]:
         """Earliest flow-completion time, assuming no new arrivals (shares
@@ -151,6 +163,7 @@ class SharedBandwidth:
             for fid in sorted(f for f, v in self._flows.items()
                               if v[0] <= self._eps):
                 _, label = self._flows.pop(fid)
+                self.epoch += 1
                 self._done.append((self._t, fid, label))
         self._t = t
 
@@ -555,7 +568,8 @@ class TieredStore:
     tiered = True
 
     def __init__(self, legs: Dict[str, DiskStore], *, table=None,
-                 clock: Optional[SimClock] = None):
+                 clock: Optional[SimClock] = None,
+                 arbiter: Optional[SharedBandwidth] = None):
         if not legs:
             raise ValueError("TieredStore needs at least one leg")
         self.legs = dict(legs)               # insertion order = hot -> cold
@@ -564,7 +578,14 @@ class TieredStore:
         self.table = table
         self.clock = clock or getattr(self.primary, "clock", None) \
             or SimClock()
+        # shared-NAS arbiter for *background* demotion traffic: when set,
+        # every demoted step is additionally charged as a contended transfer
+        # on the fleet's uplink, so step aging visibly slows foreground
+        # saves/restores instead of moving bytes for free
+        self.arbiter = arbiter
         self._down: set = set()
+        # "demotion_transfer_s" joins lazily, only when an arbiter charges
+        # (existing artifacts embed this dict — don't grow it for free)
         self.stats = {"demotions": 0, "demoted_bytes": 0}
 
     # -- tier availability ----------------------------------------------- #
@@ -688,6 +709,14 @@ class TieredStore:
                     shards = src.read_rank(step, r)     # resolves refs,
                     nbytes += dst.write_rank(step, r, shards)  # charges bw
                 dst.commit(step, n_ranks, m.get("meta"), delta_base=None)
+                if self.arbiter is not None:
+                    # the demoted bytes cross the shared uplink too: charge
+                    # them as one contended flow next to foreground traffic
+                    took = self.arbiter.transfer(
+                        self.clock.seconds, nbytes,
+                        f"demote:{name}->{dst_name}:{step}")
+                    self.stats["demotion_transfer_s"] = round(
+                        self.stats.get("demotion_transfer_s", 0.0) + took, 6)
                 src.delete_step(step, rematerialize=True)
                 sizes.pop(step)
                 # rematerialization fattened the dependents still on src

@@ -24,7 +24,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         description="Run multi-job fleet scenarios (shared topology, shared "
                     "spare pool, contended NAS bandwidth).",
         catalog={n: p.description for n, p in PRESETS.items()},
-        run=run_preset, what="fleet presets")
+        run=run_preset, what="fleet presets",
+        add_args=lambda ap: ap.add_argument(
+            "--profile", action="store_true",
+            help="attach a measured wall-time / dispatcher phase breakdown "
+                 "to each report (volatile: excluded from digests)"),
+        run_kwargs=lambda args: {"profile": args.profile})
 
 
 if __name__ == "__main__":

@@ -26,7 +26,9 @@ per-job recovery/goodput sections and fleet-level utilization.
 """
 from __future__ import annotations
 
+import heapq
 import math
+import time
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -58,6 +60,31 @@ DETECT, RESCHEDULE, RESTORE, WARMUP = ("detect", "reschedule", "restore",
                                        "warmup")
 WAITING, DONE = "waiting", "done"
 _RECOVERY = frozenset({DETECT, RESCHEDULE, RESTORE, WARMUP, WAITING})
+
+# states with no timed deadline: excluded from the wakeup heap (RUNNING jobs
+# wake on progress markers instead; WAITING jobs wake on repairs)
+_UNTIMED = (PENDING, RUNNING, WAITING, DONE)
+
+# process-wide overrides consumed by :func:`run_fleet` — they let the CLI
+# (``--profile``) and the equivalence suite flip behaviour underneath preset
+# functions that build their own FleetConfig
+_FORCE_LEGACY = False       # run every fleet under the legacy dispatcher
+_PROFILE = False            # attach a ``measured`` phase-time breakdown
+
+
+def set_force_legacy(flag: bool) -> None:
+    """Force ``legacy_dispatch=True`` on every subsequent :func:`run_fleet`
+    (the equivalence suite's hook under preset functions)."""
+    global _FORCE_LEGACY
+    _FORCE_LEGACY = bool(flag)
+
+
+def set_profile(flag: bool) -> None:
+    """Attach a ``measured`` section (wall time, tick count, per-phase
+    breakdown) to every subsequent :func:`run_fleet` report. The simulation
+    itself is unchanged — reports stay byte-identical sans ``measured``."""
+    global _PROFILE
+    _PROFILE = bool(flag)
 
 
 @dataclass(frozen=True)
@@ -96,19 +123,36 @@ class FleetConfig:
     # and the recovery escalates straight to the durable store tiers
     restore_prefetch: bool = False
     tier_correlated: bool = False
+    # background TieredStore demotions on the shared NAS: scripted
+    # ``(t_s, nbytes)`` flows modelling capacity-driven step aging
+    # (``TieredStore.demote_due``) contending with foreground saves/restores
+    demotion_traffic: Tuple[Tuple[float, float], ...] = ()
+    # A/B switch: run the poll-everything control loop that predates the
+    # indexed dispatcher (scans every job on every wakeup). Reports are
+    # byte-identical between the two paths (pinned in
+    # tests/test_fleet_dispatch.py); only wall time differs.
+    legacy_dispatch: bool = False
     seed: int = 0
 
 
 class _Job:
-    """Runtime state of one job (spec + progress + open-recovery fields)."""
+    """Runtime state of one job (spec + progress + open-recovery fields).
 
-    def __init__(self, spec: JobSpec):
+    ``done`` (productive seconds banked) is array-backed: the value lives in
+    the run's shared numpy vector at this job's ``idx``, so the indexed
+    dispatcher can advance every running job's progress in one vectorized
+    operation while per-job handlers keep reading/writing ``job.done`` as a
+    plain float (same IEEE-double arithmetic either way).
+    """
+
+    def __init__(self, spec: JobSpec, idx: int, done_arr: np.ndarray):
         self.spec = spec
+        self.idx = idx
+        self._done_arr = done_arr
         self.pol: SoakPolicy = spec.policy
         self.state = PENDING
         self.until = math.inf            # end of the current timed phase
         self.need = spec.ideal_hours * 3600.0
-        self.done = 0.0                  # productive seconds banked
         self.last_ckpt = 0.0             # durable checkpoint (productive s)
         self.next_ckpt = spec.ckpt_interval_s
         self.save_flow: Optional[Tuple[int, float]] = None   # (fid, snapshot)
@@ -138,8 +182,17 @@ class _Job:
                            saves_durable=0, saves_torn=0, saves_skipped=0,
                            prefetch_started=0, prefetch_hits=0)
         self.wait_s = 0.0
+        self._done_counted = False       # _FleetRun._n_done accounting
         # CostModel view of this job's policy for the shared planner
         self.cost_model = CostModel.from_soak_policy(self.pol)
+
+    @property
+    def done(self) -> float:
+        return float(self._done_arr[self.idx])
+
+    @done.setter
+    def done(self, v: float) -> None:
+        self._done_arr[self.idx] = v
 
     @property
     def active(self) -> bool:
@@ -165,14 +218,50 @@ class _FleetRun:
         self.events = EventQueue(self.clock)
         self.jobs: Dict[str, _Job] = {}
         self.specs: Dict[str, JobSpec] = {}
-        for spec in cfg.jobs:
+        # vectorized per-job progress state (see _Job.done): one slot per
+        # job in spec order == jobs-dict insertion order
+        n = len(cfg.jobs)
+        self._done_arr = np.zeros(n)
+        self._rate_arr = np.zeros(n)
+        self._running_arr = np.zeros(n, dtype=bool)
+        self._marker_arr = np.full(n, math.inf)
+        for idx, spec in enumerate(cfg.jobs):
             if spec.n_nodes > cfg.n_nodes:
                 raise ValueError(f"{spec.name}: wants {spec.n_nodes} nodes, "
                                  f"fleet has {cfg.n_nodes}")
             self.specs[spec.name] = spec
-            self.jobs[spec.name] = _Job(spec)
+            self.jobs[spec.name] = _Job(spec, idx, self._done_arr)
             if spec.submit_at_s > 0:
                 self.events.push(spec.submit_at_s, ("submit", spec.name))
+        self._by_idx: List[_Job] = list(self.jobs.values())
+        # -- indexed-dispatch state (maintained in both modes; only the
+        # indexed loop reads it) ---------------------------------------- #
+        # per-job generation counters: every _touch bumps a job's gen, so
+        # heap entries carrying an older gen are dropped lazily on pop
+        self._gen = [0] * n
+        self._until_heap: List[Tuple[float, int, int]] = []   # (until, i, g)
+        self._pending_set: Set[int] = set(range(n))   # every job starts PENDING
+        self._waiting_set: Set[int] = set()
+        self._shrunk_set: Set[int] = set()
+        self._zero_rate: Set[int] = set()
+        self._n_done = 0
+        self._newly_admitted: List[str] = []
+        # NAS flow index: fid -> owning job (replaces the all-jobs scan in
+        # _nas_completions); plus background demotion flows, which no job
+        # owns
+        self._flow_owner: Dict[int, _Job] = {}
+        self._demote_fids: Set[int] = set()
+        # arbiter next-completion cache, keyed on (rate-change epoch,
+        # virtual time): valid until a flow starts/cancels/completes or the
+        # arbiter's piecewise drain advances
+        self._nas_cache_key: Optional[Tuple[int, float]] = None
+        self._nas_cache_val: Optional[float] = None
+        self._legacy = cfg.legacy_dispatch
+        self._ticks = 0
+        self._wall_s = 0.0
+        self._prof: Optional[Dict[str, float]] = None
+        for t_d, nbytes in cfg.demotion_traffic:
+            self.events.push(float(t_d), ("demote", float(nbytes)))
         schedule: List[FaultEvent] = list(cfg.scripted)
         weights = (None if cfg.fault_mix == "table1"
                    else dict(get_mix(cfg.fault_mix).weights))
@@ -197,7 +286,8 @@ class _FleetRun:
         # vs-wait and regrow-on-repair are planned here, per-job costs
         # supplied per call; the engine below is mechanism only
         self.planner = RecoveryPlanner(cfg.planner_policy)
-        self.counts = dict(idle_faults=0, job_faults=0, preemptions=0)
+        self.counts = dict(idle_faults=0, job_faults=0, preemptions=0,
+                           demotions_started=0, demotions_drained=0)
         # (t, domain) -> set of job names hit by that correlated event
         self.correlated: Dict[Tuple[float, str], Set[str]] = {}
         # streaming TEE service + cross-job correlator (Eagle Eye)
@@ -218,19 +308,83 @@ class _FleetRun:
         return float(self.rng.exponential(pol.detect_mean_s))
 
     def _next_repair(self) -> Optional[float]:
+        # O(1): the array-backed topology caches its min repair deadline
         due = self.topo.next_repair_at()
         if due is None:
             return None
         return max(due, self.clock.seconds + 1.0)
 
+    # -- indexed-dispatch bookkeeping ----------------------------------- #
+    def _touch(self, job: _Job) -> None:
+        """Refresh every index the dispatcher keeps for ``job``: the rate /
+        running / marker vectors, the pending/waiting/shrunk/zero-rate dirty
+        sets, the done counter, and (lazily, via a bumped generation) its
+        wakeup-heap entry. Called by every handler that mutates a job's
+        state, phase deadline, assignment or checkpoint marker. Inert under
+        legacy dispatch — the poll loop rescans instead, keeping its cost
+        profile honest for the A/B."""
+        if self._legacy:
+            return
+        i = job.idx
+        self._gen[i] += 1
+        st = job.state
+        view = self.sched.views.get(job.spec.name)
+        r = len(view.assigned) / job.spec.n_nodes if view is not None else 0.0
+        running = st == RUNNING
+        self._rate_arr[i] = r
+        self._running_arr[i] = running
+        self._marker_arr[i] = min(job.next_ckpt, job.need)
+        (self._pending_set.add if st == PENDING
+         else self._pending_set.discard)(i)
+        (self._waiting_set.add if st == WAITING
+         else self._waiting_set.discard)(i)
+        shrunk = (running and view is not None
+                  and len(view.assigned) < job.spec.n_nodes)
+        (self._shrunk_set.add if shrunk else self._shrunk_set.discard)(i)
+        (self._zero_rate.add if running and r <= 0.0
+         else self._zero_rate.discard)(i)
+        if st == DONE and not job._done_counted:
+            job._done_counted = True
+            self._n_done += 1
+        if job.until < math.inf and st not in _UNTIMED:
+            heapq.heappush(self._until_heap, (job.until, i, self._gen[i]))
+
+    def _nas_start(self, t: float, nbytes: float, label: str,
+                   job: _Job) -> int:
+        fid = self.nas.start(t, nbytes, label)
+        self._flow_owner[fid] = job
+        return fid
+
+    def _nas_cancel(self, fid: int) -> None:
+        self.nas.cancel(fid)
+        self._flow_owner.pop(fid, None)
+
+    def _nas_next(self) -> Optional[float]:
+        """Cached ``SharedBandwidth.next_completion``: the prediction is
+        recomputed only when the arbiter's rate-change epoch (a flow
+        started/cancelled/completed) or its piecewise virtual time moved —
+        otherwise the flow set and shares are unchanged and the cached
+        completion time is still exact."""
+        key = (self.nas.epoch, self.nas.virtual_time)
+        if key != self._nas_cache_key:
+            self._nas_cache_key = key
+            self._nas_cache_val = self.nas.next_completion()
+        return self._nas_cache_val
+
+    def _activate(self, job: _Job, t: float) -> None:
+        if job.state == PENDING:
+            job.state = RUNNING
+            job.admitted_at = t
+            job.next_ckpt = job.spec.ckpt_interval_s
+            self._touch(job)
+
     def _try_admit(self, t: float) -> None:
-        self.sched.try_admit()
-        for name in self.sched.views:
-            job = self.jobs[name]
-            if job.state == PENDING:
-                job.state = RUNNING
-                job.admitted_at = t
-                job.next_ckpt = job.spec.ckpt_interval_s
+        for spec in self.sched.try_admit():
+            self._activate(self.jobs[spec.name], t)
+        # jobs admitted by a mid-dispatch scheduler.submit() call (submit
+        # events) activate here, on the same _process pass as before
+        while self._newly_admitted:
+            self._activate(self.jobs[self._newly_admitted.pop(0)], t)
 
     # -- recovery transaction ------------------------------------------- #
     def _open_recovery(self, job: _Job, t: float, victims: List[str],
@@ -241,7 +395,7 @@ class _FleetRun:
         the metric stream, so they open with ``detect_s=0.0``."""
         if job.save_flow is not None:
             # the crash tears the in-flight save: it never becomes durable
-            self.nas.cancel(job.save_flow[0])
+            self._nas_cancel(job.save_flow[0])
             job.save_flow = None
             job.counts["saves_torn"] += 1
         job.state = DETECT
@@ -263,6 +417,7 @@ class _FleetRun:
             job.victim_racks.append(self.topo.domain_of(v))
             view.evict(v, t)
             job.pending_replace += 1
+        self._touch(job)
 
     def _avoid_domains(self, job: _Job) -> Set[str]:
         # 2+ victims in one rack point at a correlated root cause: keep
@@ -354,6 +509,7 @@ class _FleetRun:
             if not retrying:
                 job.wait_start = t
                 job.counts["waits"] += 1
+            self._touch(job)
             return
         if retrying:
             job.wait_s += t - job.wait_start
@@ -361,6 +517,7 @@ class _FleetRun:
         job.state = RESCHEDULE
         job.until = t + job.pol.evict_reschedule_s
         self._maybe_prefetch(job, t)
+        self._touch(job)
 
     def _maybe_prefetch(self, job: _Job, t: float) -> None:
         """Speculative restore prefetch: while the job sits in its
@@ -378,15 +535,15 @@ class _FleetRun:
         if src != SRC_STORE:
             return
         job.counts["prefetch_started"] += 1
-        job.prefetch_flow = self.nas.start(
-            t, job.spec.ckpt_bytes, f"{job.spec.name}:prefetch")
+        job.prefetch_flow = self._nas_start(
+            t, job.spec.ckpt_bytes, f"{job.spec.name}:prefetch", job)
 
     def _open_planned_reshard(self, job: _Job, t: float) -> None:
         """A planned topology change (preemption donation or regrow): roll
         back to the last durable checkpoint and reshard through the store.
         No detect phase — nothing failed."""
         if job.save_flow is not None:
-            self.nas.cancel(job.save_flow[0])
+            self._nas_cancel(job.save_flow[0])
             job.save_flow = None
             job.counts["saves_torn"] += 1
         job.state = RESCHEDULE
@@ -398,21 +555,22 @@ class _FleetRun:
         job.victim_racks = []
         job.until = t + job.pol.evict_reschedule_s
         self._maybe_prefetch(job, t)
+        self._touch(job)
 
     def _preempt_donor(self, donor: _Job, t: float) -> None:
         """The donor lost a machine to a higher-priority job."""
         donor.counts["donations_given"] += 1
         self._open_planned_reshard(donor, t)
 
-    def _maybe_regrow(self, t: float) -> None:
+    def _maybe_regrow(self, t: float, shrunk: List[_Job]) -> None:
         """Repairs landed or capacity freed: shrunken RUNNING jobs reclaim
         machines, highest priority first, whenever the planner scores the
         reshard (rollback + store restore) cheaper than the throughput still
         being lost while degraded. This is the regrow-on-repair rung fleet
-        jobs historically never took (they stayed shrunk for life)."""
-        shrunk = [j for j in self.jobs.values()
-                  if j.state == RUNNING and j.spec.name in self.sched.views
-                  and len(self._view(j).assigned) < j.spec.n_nodes]
+        jobs historically never took (they stayed shrunk for life).
+        ``shrunk`` comes from the caller: the legacy loop rescans every job,
+        the indexed loop reads its maintained shrunk set — same candidates
+        either way (the sort below fixes the order)."""
         for job in sorted(shrunk,
                           key=lambda j: (-j.spec.priority,
                                          self.sched.submit_order(
@@ -449,7 +607,7 @@ class _FleetRun:
         if job.restore_src != SRC_STORE and job.prefetch_flow is not None:
             # misprediction (the plan improved while rescheduling): drop
             # the speculative stream, the bytes were never needed
-            self.nas.cancel(job.prefetch_flow)
+            self._nas_cancel(job.prefetch_flow)
             job.prefetch_flow = None
         if job.restore_src == SRC_STORE:
             if job.prefetch_done:
@@ -471,12 +629,13 @@ class _FleetRun:
                 # (a flow that contends with every other job's saves and
                 # restores)
                 job.until = math.inf    # ends when the NAS flow drains
-                job.restore_flow = self.nas.start(
-                    t, job.spec.ckpt_bytes, f"{job.spec.name}:restore")
+                job.restore_flow = self._nas_start(
+                    t, job.spec.ckpt_bytes, f"{job.spec.name}:restore", job)
         elif job.restore_src == SRC_CACHE:
             job.until = t + pol.inplace_restart_s + pol.restore_cache_s
         else:
             job.until = t + pol.restore_backup_s
+        self._touch(job)
 
     def _close_recovery(self, job: _Job, t: float) -> None:
         view = self._view(job)
@@ -489,11 +648,12 @@ class _FleetRun:
         job.restart_times.append(t - job.recovery_t0 - job.wait_s_in_open)
         job.downtime_s += t - job.recovery_t0
         if job.prefetch_flow is not None:       # never adopted: stale
-            self.nas.cancel(job.prefetch_flow)
+            self._nas_cancel(job.prefetch_flow)
             job.prefetch_flow = None
         job.prefetch_done = False
         job.state = RUNNING
         job.until = math.inf
+        self._touch(job)
 
     # -- fault dispatch -------------------------------------------------- #
     def _handle_incident(self, t: float, evs: List[FaultEvent]) -> None:
@@ -661,7 +821,7 @@ class _FleetRun:
             if job.state == DETECT:
                 return                          # handled when checks finish
             if job.state == RESTORE and job.restore_flow is not None:
-                self.nas.cancel(job.restore_flow)
+                self._nas_cancel(job.restore_flow)
                 job.restore_flow = None
             if job.state == WAITING:
                 return                          # retried on the next repair
@@ -672,6 +832,7 @@ class _FleetRun:
         if job.state == STALLED:
             job.state = RUNNING
             job.until = math.inf
+            self._touch(job)
         elif job.state == DETECT:
             if job.inplace:
                 self._start_restore(job, t)   # no eviction: restart in place
@@ -682,6 +843,7 @@ class _FleetRun:
         elif job.state == RESTORE:          # fixed-cost restore finished
             job.state = WARMUP
             job.until = t + job.pol.warmup_s
+            self._touch(job)
         elif job.state == WARMUP:
             self._close_recovery(job, t)
 
@@ -703,8 +865,9 @@ class _FleetRun:
             job.final_nodes = len(self._view(job).assigned)
             job.until = math.inf
             if job.save_flow is not None:
-                self.nas.cancel(job.save_flow[0])
+                self._nas_cancel(job.save_flow[0])
                 job.save_flow = None
+            self._touch(job)
             self.sched.complete(spec.name)
             self._try_admit(t)
             return
@@ -714,17 +877,53 @@ class _FleetRun:
                 # skip this cadence tick rather than stacking flows
                 job.counts["saves_skipped"] += 1
                 job.next_ckpt = job.done + spec.ckpt_interval_s
+                self._touch(job)
                 return
             job.counts["saves_started"] += 1
-            job.save_flow = (self.nas.start(t, spec.ckpt_bytes,
-                                            f"{spec.name}:save"), job.done)
+            job.save_flow = (self._nas_start(t, spec.ckpt_bytes,
+                                             f"{spec.name}:save", job),
+                             job.done)
             job.next_ckpt = job.done + spec.ckpt_interval_s
             job.state = STALLED
             job.until = t + job.pol.ckpt_save_stall_s
+            self._touch(job)
 
     # -- NAS flow completions --------------------------------------------- #
     def _nas_completions(self, t: float) -> None:
+        """Indexed flow-completion dispatch: every drained fid goes straight
+        to its owning job via ``_flow_owner`` instead of the all-jobs scan
+        the legacy loop still runs. Background demotion flows (TieredStore
+        step aging on the shared NAS) have no owning job."""
         for t_done, fid, _label in self.nas.take_completed(t):
+            if fid in self._demote_fids:
+                self._demote_fids.discard(fid)
+                self.counts["demotions_drained"] += 1
+                continue
+            job = self._flow_owner.pop(fid, None)
+            if job is None:
+                continue
+            if job.save_flow is not None and job.save_flow[0] == fid:
+                job.last_ckpt = job.save_flow[1]
+                job.save_flow = None
+                job.counts["saves_durable"] += 1
+            elif job.restore_flow == fid:
+                job.restore_flow = None
+                job.state = WARMUP
+                job.until = t_done + job.pol.warmup_s
+                self._touch(job)
+            elif job.prefetch_flow == fid:
+                # speculative stream drained before the restore leg
+                # opened: the bytes are staged, the restore will be free
+                job.prefetch_flow = None
+                job.prefetch_done = True
+
+    def _nas_completions_legacy(self, t: float) -> None:
+        for t_done, fid, _label in self.nas.take_completed(t):
+            if fid in self._demote_fids:
+                self._demote_fids.discard(fid)
+                self.counts["demotions_drained"] += 1
+                continue
+            self._flow_owner.pop(fid, None)
             for job in self.jobs.values():
                 if job.save_flow is not None and job.save_flow[0] == fid:
                     job.last_ckpt = job.save_flow[1]
@@ -745,15 +944,181 @@ class _FleetRun:
 
     # -- main loop --------------------------------------------------------- #
     def run(self) -> dict:
+        t0 = time.perf_counter()
         for spec in self.cfg.jobs:
             if spec.submit_at_s <= 0:
-                self.sched.submit(spec)
+                if self.sched.submit(spec) is not None:
+                    self._newly_admitted.append(spec.name)
         self._try_admit(0.0)
+        if self.cfg.legacy_dispatch:
+            self._run_legacy()
+        else:
+            self._run_indexed()
+        self._wall_s = time.perf_counter() - t0
+        return self._report()
+
+    def _run_indexed(self) -> None:
+        """Event-driven dispatch: O(1) done-count termination, the next
+        deadline from the wakeup heap / marker vector / epoch-cached NAS
+        predictor, and vectorized progress banking between control events.
+        Produces the exact tick sequence (and so the exact report) of
+        :meth:`_run_legacy`; only the per-tick cost differs."""
+        n_jobs = len(self._by_idx)
+        prof = self._prof
+        guard = 0
+        while self._n_done < n_jobs:
+            guard += 1
+            if guard > 5_000_000:
+                raise RuntimeError("fleet loop did not converge")
+            self._ticks += 1
+            if prof is not None:
+                tp = time.perf_counter()
+            t_now = self.clock.seconds
+            t_next = max(self._next_deadline(t_now), t_now)
+            dt = t_next - t_now
+            if dt > 0.0:
+                # identical IEEE arithmetic to the legacy per-job loop:
+                # done[i] += dt * rate[i], running jobs only
+                np.add(self._done_arr, dt * self._rate_arr,
+                       out=self._done_arr, where=self._running_arr)
+            if prof is not None:
+                prof["deadline_bank"] += time.perf_counter() - tp
+            self.clock.advance_to(t_next)
+            self._process(t_next)
+
+    def _next_deadline(self, t_now: float) -> float:
+        """Minimum over exactly the candidate deadlines the legacy scan
+        collects, without the per-job Python loop: event-queue head, cached
+        NAS completion, wakeup-heap top (timed recovery phases), one
+        vectorized pass over running jobs' progress markers, and the repair
+        bound whenever any job is pending/waiting/shrunk/starved."""
+        cands: List[float] = []
+        if self.events:
+            cands.append(self.events.peek_time())
+        nc = self._nas_next()
+        if nc is not None:
+            cands.append(nc)
+        h = self._until_heap
+        while h:
+            until, i, g = h[0]
+            if g != self._gen[i]:
+                heapq.heappop(h)        # stale: the job was touched since
+                continue
+            cands.append(until)
+            break
+        # markers re-derive the exact legacy expression each tick (an
+        # anchored fire-time pushed at touch-time would be ulps away from
+        # the freshly-computed candidate and break the byte-identical tick
+        # sequence); one numpy pass instead of a per-job Python loop
+        m = self._running_arr & (self._rate_arr > 0.0)
+        if m.any():
+            fire = t_now + np.maximum(
+                self._marker_arr[m] - self._done_arr[m], 0.0) \
+                / self._rate_arr[m]
+            cands.append(float(fire.min()))
+        if (self._pending_set or self._waiting_set or self._shrunk_set
+                or self._zero_rate):
+            # a queued, parked, shrunken or starved job wakes on repairs
+            nr = self._next_repair()
+            if nr is not None:
+                cands.append(nr)
+        if not cands:
+            raise RuntimeError(
+                "fleet deadlock: no runnable job, no pending event "
+                f"(states: {[j.state for j in self.jobs.values()]})")
+        return min(cands)
+
+    def _advance_due(self, t: float) -> None:
+        """Pop every timed job whose deadline fired and advance it in
+        job-index order — the same order (and the same lazy condition
+        re-check) as the legacy all-jobs scan. A handler may arm a new
+        same-tick deadline on another job (e.g. a preemption donor with a
+        zero-length reschedule window): the legacy scan reaches that job in
+        the same pass only if it sits later in index order, so newly due
+        entries join the pass only when their index is still ahead; earlier
+        ones are re-queued for the next tick."""
+        h = self._until_heap
+        due: List[int] = []             # min-heap of due job indices
+        while h and h[0][0] <= t + _EPS:
+            _until, i, g = heapq.heappop(h)
+            if g == self._gen[i]:
+                heapq.heappush(due, i)
+        last = -1
+        while due:
+            i = heapq.heappop(due)
+            if i <= last:               # re-armed duplicate: once per pass
+                continue
+            last = i
+            job = self._by_idx[i]
+            if job.until <= t + _EPS and job.state not in _UNTIMED:
+                self._advance_phase(job, t)
+            while h and h[0][0] <= t + _EPS:
+                entry = heapq.heappop(h)
+                _u2, i2, g2 = entry
+                if g2 != self._gen[i2]:
+                    continue
+                if i2 > last:
+                    heapq.heappush(due, i2)
+                else:
+                    heapq.heappush(h, entry)    # next tick, like legacy
+                    break
+
+    def _process(self, t: float) -> None:
+        prof = self._prof
+        if prof is not None:
+            tp = time.perf_counter()
+        self._nas_completions(t)
+        if prof is not None:
+            now = time.perf_counter()
+            prof["nas"] += now - tp
+            tp = now
+        self.topo.repair_due(t)
+        self._advance_due(t)
+        if prof is not None:
+            now = time.perf_counter()
+            prof["phases"] += now - tp
+            tp = now
+        for i in sorted(self._waiting_set):
+            job = self._by_idx[i]
+            if job.state == WAITING:
+                self._retry_waiting(job, t)
+        # regrow runs after parked recoveries retried (a below-floor recovery
+        # outranks a comfort regrow) and before new admissions (_try_admit)
+        self._maybe_regrow(t, [self._by_idx[i]
+                               for i in sorted(self._shrunk_set)])
+        if prof is not None:
+            now = time.perf_counter()
+            prof["retry_regrow"] += now - tp
+            tp = now
+        # exact-condition vectorized prefilter over the running jobs, then
+        # the per-job legacy re-check (an earlier marker can complete a job
+        # and admit successors mid-pass)
+        fired = np.flatnonzero(self._running_arr
+                               & (self._done_arr >= self._marker_arr - _EPS))
+        for i in fired:
+            job = self._by_idx[int(i)]
+            if job.state == RUNNING and job.done >= self._marker(job) - _EPS:
+                self._at_marker(job, t)
+        if prof is not None:
+            now = time.perf_counter()
+            prof["markers"] += now - tp
+            tp = now
+        self._dispatch_events(t)
+        self._try_admit(t)
+        if prof is not None:
+            prof["events_admit"] += time.perf_counter() - tp
+
+    def _run_legacy(self) -> None:
+        """The poll-everything loop the indexed dispatcher replaced, kept
+        verbatim for the same-machine A/B (``legacy_dispatch=True``): every
+        wakeup rescans all jobs for candidate deadlines, termination rescans
+        every state, and progress banks per job in Python."""
         guard = 0
         while any(j.state != DONE for j in self.jobs.values()):
             guard += 1
             if guard > 5_000_000:
                 raise RuntimeError("fleet loop did not converge")
+            self._ticks += 1
             t_now = self.clock.seconds
             cands: List[float] = []
             if self.events:
@@ -793,11 +1158,10 @@ class _FleetRun:
                 if job.state == RUNNING:
                     job.done += dt * job.rate(self._view(job))
             self.clock.advance_to(t_next)
-            self._process(t_next)
-        return self._report()
+            self._process_legacy(t_next)
 
-    def _process(self, t: float) -> None:
-        self._nas_completions(t)
+    def _process_legacy(self, t: float) -> None:
+        self._nas_completions_legacy(t)
         self.topo.repair_due(t)
         for job in self.jobs.values():
             if job.until <= t + _EPS and job.state not in (PENDING, RUNNING,
@@ -808,19 +1172,32 @@ class _FleetRun:
                 self._retry_waiting(job, t)
         # regrow runs after parked recoveries retried (a below-floor recovery
         # outranks a comfort regrow) and before new admissions (_try_admit)
-        self._maybe_regrow(t)
+        self._maybe_regrow(t, [
+            j for j in self.jobs.values()
+            if j.state == RUNNING and j.spec.name in self.sched.views
+            and len(self._view(j).assigned) < j.spec.n_nodes])
         for job in self.jobs.values():
             if job.state == RUNNING and job.done >= self._marker(job) - _EPS:
                 self._at_marker(job, t)
+        self._dispatch_events(t)
+        self._try_admit(t)
+
+    def _dispatch_events(self, t: float) -> None:
         for group in group_domain_incidents(self.events.pop_due(t)):
             first = group[0][1]
             if isinstance(first, FaultEvent):
                 self._handle_incident(t, [p for _t_ev, p in group])
             elif isinstance(first, tuple) and first[0] == "submit":
-                self.sched.submit(self.specs[first[1]])
+                if self.sched.submit(self.specs[first[1]]) is not None:
+                    self._newly_admitted.append(first[1])
             elif isinstance(first, tuple) and first[0] == "tee_flush":
                 self._handle_tee_flush(t, first[1])
-        self._try_admit(t)
+            elif isinstance(first, tuple) and first[0] == "demote":
+                # background TieredStore demotion: a flow on the shared NAS
+                # no job owns — foreground saves/restores contend with it
+                fid = self.nas.start(t, first[1], "tier:demote")
+                self._demote_fids.add(fid)
+                self.counts["demotions_started"] += 1
 
     # -- report ------------------------------------------------------------ #
     def _job_report(self, job: _Job) -> dict:
@@ -886,6 +1263,8 @@ class _FleetRun:
                 **({"restore_prefetch": True} if cfg.restore_prefetch
                    else {}),
                 **({"tier_correlated": True} if cfg.tier_correlated else {}),
+                **({"demotion_flows": len(cfg.demotion_traffic)}
+                   if cfg.demotion_traffic else {}),
             },
             "makespan_days": round(elapsed / DAY_S, 6),
             "fleet": {
@@ -895,7 +1274,11 @@ class _FleetRun:
                 "preemptions": self.counts["preemptions"],
                 "scheduler": dict(self.sched.stats),
                 "nas": {"bw_total": cfg.nas_bw_total,
-                        **dict(self.nas.stats)},
+                        **dict(self.nas.stats),
+                        **({"demotions": {
+                            "started": self.counts["demotions_started"],
+                            "drained": self.counts["demotions_drained"]}}
+                           if cfg.demotion_traffic else {})},
             },
             "faults": {
                 "injected": self.n_injected,
@@ -925,12 +1308,34 @@ class _FleetRun:
 def run_fleet(cfg: FleetConfig, seed: Optional[int] = None) -> dict:
     """Run one multi-job fleet simulation; returns its deterministic JSON
     report (shared schema, see :mod:`repro.report`). ``seed`` overrides
-    ``cfg.seed``."""
+    ``cfg.seed``. Module-level overrides: :func:`set_force_legacy` flips
+    every run onto the legacy dispatcher (the equivalence suite's hook);
+    :func:`set_profile` attaches a volatile ``measured`` section (wall time,
+    ticks, per-phase breakdown) without changing the report body."""
     from repro.report import finalize
 
     use_seed = cfg.seed if seed is None else seed
-    return finalize(_FleetRun(cfg, use_seed).run(), engine="fleet",
-                    seed=use_seed)
+    if _FORCE_LEGACY and not cfg.legacy_dispatch:
+        cfg = replace(cfg, legacy_dispatch=True)
+    run = _FleetRun(cfg, use_seed)
+    if _PROFILE and not cfg.legacy_dispatch:
+        run._prof = {k: 0.0 for k in ("deadline_bank", "nas", "phases",
+                                      "retry_regrow", "markers",
+                                      "events_admit")}
+    report = finalize(run.run(), engine="fleet", seed=use_seed)
+    if _PROFILE:
+        wall = max(run._wall_s, 1e-9)
+        measured = {
+            "dispatch": "legacy" if cfg.legacy_dispatch else "indexed",
+            "ticks": run._ticks,
+            "wall_s": round(run._wall_s, 6),
+            "ticks_per_s": round(run._ticks / wall, 1),
+        }
+        if run._prof is not None:
+            measured["profile_s"] = {k: round(v, 6)
+                                     for k, v in sorted(run._prof.items())}
+        report["measured"] = measured
+    return report
 
 
 def no_preemption(cfg: FleetConfig) -> FleetConfig:

@@ -245,16 +245,57 @@ def rack_outage_tiered(seed: int = 0) -> dict:
                     for n in downtime["prefetch"]))
 
 
+@preset("demotion_contention",
+        "Background TieredStore demotions routed through the fleet's shared "
+        "NAS arbiter: scripted step-aging flows land on every checkpoint "
+        "cadence tick, so the job's async saves drain contended instead of "
+        "solo — same job, same timeline, measurably busier uplink than the "
+        "demotion-free baseline.")
+def demotion_contention(seed: int = 0) -> dict:
+    # one 4-node job saving every 1800 productive seconds; with no faults
+    # wall time == productive time, so demotion flows scheduled on the
+    # cadence grid are in flight exactly when each save starts
+    demote = tuple((1800.0 * k, 32e9) for k in range(1, 12))
+    cfg = FleetConfig(jobs=(_job("train", ideal_hours=6.0),),
+                      n_nodes=8, n_spares=2, demotion_traffic=demote,
+                      seed=seed)
+    with_d = run_fleet(cfg, seed=seed)
+    baseline = run_fleet(replace(cfg, demotion_traffic=()), seed=seed)
+    nas_d = with_d["fleet"]["nas"]
+    nas_b = baseline["fleet"]["nas"]
+    return dict(with_d, scenario="demotion_contention",
+                no_demotion=baseline,
+                contended_flows={"demotion": nas_d["contended_flows"],
+                                 "baseline": nas_b["contended_flows"]},
+                demotion_contends_with_saves=(
+                    nas_d["contended_flows"] > nas_b["contended_flows"]
+                    and nas_d["demotions"]["drained"]
+                    == nas_d["demotions"]["started"] > 0))
+
+
 # --------------------------------------------------------------------------- #
-def run_preset(name: str, seed: int = 0) -> dict:
+def run_preset(name: str, seed: int = 0, profile: bool = False) -> dict:
+    """Run one fleet preset. ``profile=True`` attaches the volatile
+    ``measured`` section (wall time, tick count, per-phase dispatcher
+    breakdown) to every fleet report the preset produces — the simulation
+    and the report body are unchanged."""
     if name not in PRESETS:
         raise KeyError(f"unknown fleet preset {name!r}; have: "
                        f"{', '.join(sorted(PRESETS))}")
     from repro.report import finalize
 
+    from .engine import set_profile
+
+    if profile:
+        set_profile(True)
+    try:
+        rep = PRESETS[name].run(seed)
+    finally:
+        if profile:
+            set_profile(False)
     # re-finalize: presets add keys on top of run_fleet's report, so the
     # timeline digest must be recomputed over the final shape
-    return finalize(PRESETS[name].run(seed), scenario=name, seed=seed)
+    return finalize(rep, scenario=name, seed=seed)
 
 
 def preset_names() -> List[str]:

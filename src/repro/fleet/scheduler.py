@@ -87,7 +87,13 @@ class FleetScheduler:
 
     def try_admit(self) -> List[JobSpec]:
         """Admit every pending job whose full gang fits, highest priority
-        first (all-or-nothing per job). Returns the admitted specs."""
+        first (all-or-nothing per job). Returns the admitted specs.
+
+        Early-outs when the queue is empty: the fleet engine calls this on
+        every control tick, and at steady state (all jobs admitted) the call
+        must not pay the ``free_nodes()`` scan."""
+        if not self.pending:
+            return []
         admitted: List[JobSpec] = []
         for spec in sorted(self.pending, key=self._queue_key):
             free = self.topo.free_nodes()

@@ -327,33 +327,30 @@ class FleetStreamTEE:
         w = models.window
         stride = w // 2
         traces = [self._job_trace(o) for o in group]
-        rings = [MetricRing(n_ranks, tr.metrics.shape[2], capacity=2 * w)
-                 for tr in traces]
+        # stride batching across only the still-quiet jobs: the group's
+        # traces share one (jobs, ranks, T, metrics) tensor and each stride
+        # slices the current window for every live job in one indexing op —
+        # no per-job ring allocation or push loop on the hot path, and jobs
+        # leave the batch the stride they fire
+        stack = np.stack([tr.metrics for tr in traces])
         T = self.trace_len
         init_len = traces[0].init_len
         fired: Dict[int, TEEVerdict] = {}
-        pending = list(range(len(group)))
+        live = list(range(len(group)))
         for t0 in TEEService.window_starts(T, init_len, w, stride):
             t1 = t0 + w
-            if t1 > T:
+            if t1 > T or not live:
                 break
-            live = [j for j in pending if j not in fired]
-            if not live:
-                break
-            # ingest the next stride's columns into each live job's ring
-            for j in live:
-                have = rings[j].count
-                if have < t1:
-                    rings[j].push(traces[j].metrics[:, have:t1, :])
-            windows = np.stack([rings[j].window(w) for j in live])
+            windows = stack[np.asarray(live), :, t0:t1, :]
             bv = batch_score_windows(models, windows)
             lvs = [self.log_det.detect(traces[j].logs, t0, t1) for j in live]
             verdicts = to_verdicts(bv, t0, t1, lvs)
             self.stats["batch_passes"] += 1
             self.stats["windows_scored"] += len(live)
-            for j, v in zip(live, verdicts):
+            for j, v in zip(tuple(live), verdicts):
                 if v.anomalous:
                     fired[j] = v
+                    live.remove(j)
         out: List[JobAnomaly] = []
         for j, obs in enumerate(group):
             v = fired.get(j)
